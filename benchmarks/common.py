@@ -1,0 +1,18 @@
+"""Shared benchmark helpers: run one DFRC accelerator on one task."""
+
+from __future__ import annotations
+
+from repro.core import DFRCAccelerator
+
+
+def fit_and_eval(cfg, ds, metric: str) -> float:
+    acc = DFRCAccelerator(cfg).fit(ds.inputs_train, ds.targets_train)
+    if metric == "nrmse":
+        return acc.evaluate_nrmse(ds.inputs_test, ds.targets_test)
+    if metric == "ser":
+        return acc.evaluate_ser(ds.inputs_test, ds.targets_test)
+    raise ValueError(metric)
+
+
+def csv_row(name: str, value, derived: str = "") -> str:
+    return f"{name},{value},{derived}"

@@ -1,0 +1,46 @@
+"""Paper Fig. 5: NRMSE on NARMA10 and Santa Fe for the three accelerators.
+
+Reproduction targets (the paper reports relative numbers only):
+  * NARMA10:  Silicon MR ~35 % lower NRMSE than All Optical (MZI),
+              on par with Electronic (MG).
+  * Santa Fe: Silicon MR ≫ MZI (paper: 98.7 % lower), MG slightly best.
+Datasets sized per the paper: NARMA10 2000 (1000/1000), Santa Fe 6000
+(4000/2000, Haken–Lorenz surrogate — DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from repro.configs import dfrc_tasks
+from repro.core import tasks
+
+from .common import csv_row, fit_and_eval
+
+
+def run() -> list[str]:
+    rows = []
+    cfgs = dfrc_tasks()
+
+    narma = tasks.narma10(2000, seed=0)
+    sf = tasks.santa_fe(6000, seed=0)
+
+    results = {}
+    for task_name, ds in [("narma10", narma), ("santa_fe", sf)]:
+        for acc_name, cfg in cfgs[task_name].items():
+            err = fit_and_eval(cfg, ds, "nrmse")
+            results[(task_name, acc_name)] = err
+            rows.append(csv_row(f"fig5/{task_name}/{acc_name}/nrmse", f"{err:.4f}",
+                                f"N={cfg.n_nodes}"))
+
+    for task_name, claim in [("narma10", 0.35), ("santa_fe", 0.987)]:
+        mr = results[(task_name, "Silicon MR")]
+        mzi = results[(task_name, "All Optical (MZI)")]
+        rel = 1.0 - mr / mzi
+        rows.append(csv_row(f"fig5/{task_name}/mr_vs_mzi_reduction", f"{rel:.3f}",
+                            f"paper_claims={claim}"))
+    mr, mg = results[("narma10", "Silicon MR")], results[("narma10", "Electronic (MG)")]
+    rows.append(csv_row("fig5/narma10/mr_vs_mg_ratio", f"{mr / mg:.3f}", "paper:on-par"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,46 @@
+"""Microbenchmarks for the Pallas kernels (interpret mode on CPU — numbers
+are functional sanity, not TPU perf; the TPU claims live in §Roofline)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SiliconMR, make_mask
+from repro.kernels.dfr_scan import dfr_scan
+from repro.kernels.ridge_gram import gram_accumulate
+
+from .common import csv_row
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    b, k, n = 256, 64, 64
+    j = jnp.asarray(rng.uniform(0, 1, (b, k)), jnp.float32)
+    mask = make_mask(n)
+    s0 = jnp.zeros((b, n), jnp.float32)
+    us = _time(lambda a, m, s: dfr_scan(SiliconMR(), a, m, s), j, mask, s0)
+    rows.append(csv_row("kernel/dfr_scan_us", f"{us:.0f}", f"B={b},K={k},N={n},interpret"))
+
+    x = jnp.asarray(rng.standard_normal((2048, 256)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((2048, 1)), jnp.float32)
+    us = _time(gram_accumulate, x, y)
+    rows.append(csv_row("kernel/ridge_gram_us", f"{us:.0f}", "T=2048,F=256,interpret"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,227 @@
+"""§Roofline: three-term roofline per (arch × shape) from the compiled dry-run.
+
+Hardware model (assignment): TPU v5e-class chip —
+  peak = 197 TFLOP/s bf16,  HBM = 819 GB/s,  ICI ≈ 50 GB/s/link (~3 links
+  usable per collective on a 2-D torus; we charge the per-device collective
+  bytes against one link — the conservative reading).
+
+Terms (per device, seconds per training/serving step):
+  compute    = HLO_FLOPs / peak
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes / link_bw
+
+Sources:
+  * HLO_FLOPs / HLO_bytes: ``compiled.cost_analysis()`` via the
+    *structure-calibrated* extraction (launch/calibrate.py) — XLA counts a
+    while body once, so per-unit costs are measured on 1-unit vs 2-unit
+    variants at full tensor dims and recombined exactly.  Residual
+    under-counts from inner sequence loops (sLSTM scan, ReservoirMixer
+    period scan, chunked-attention KV scan) get analytic corrections below.
+  * collective_bytes: parsed from the compiled HLO (launch/dryrun.py),
+    ring-algorithm wire-bytes convention, same calibration.
+  * MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per the assignment;
+    ratio MODEL_FLOPS / HLO_FLOPs measures how much compiled compute is
+    "useful" (remat + attention + dispatch overhead show up here).
+
+CPU-backend caveat recorded with every row: XLA-CPU stores bf16 temporaries
+as f32 (fusion-boundary promotion), so memory_analysis() and byte counts are
+upper bounds ≈ 2× on activation traffic; TPU numbers are strictly lower.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.configs import SHAPES, get_config, list_archs, runnable_cells
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s
+LINK_BW = 50e9               # B/s per ICI link
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def _analytic_corrections(cfg, shape: str) -> float:
+    """FLOPs (per device, one step) that inner `while` loops hide from the
+    calibrated HLO count.  Documented in the module docstring."""
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    if info["kind"] == "decode":
+        s = 1  # one new token
+    n_dev = 256
+    extra = 0.0
+    mult = 3.0 if info["kind"] == "train" else 1.0  # fwd+bwd+remat ≈ 3-4× fwd
+    # sLSTM sequential scan: recurrent matmul per step, counted once per unit.
+    n_slstm = sum(1 for blk in cfg.unit if blk.mixer == "slstm") * cfg.n_units
+    if n_slstm and s > 1:
+        d, h = cfg.d_model, cfg.n_heads
+        per_step = 2.0 * b * (4.0 * d * d / h)  # block-diag recurrence
+        extra += mult * n_slstm * (s - 1) * per_step / n_dev
+    # ReservoirMixer period scan: ~8 flops per (node, channel, token).
+    n_res = sum(1 for blk in cfg.unit if blk.mixer == "reservoir") * cfg.n_units
+    if n_res and s > 1:
+        r = max(1, cfg.d_model // cfg.reservoir_nodes)
+        extra += mult * n_res * (s - 1) * 8.0 * b * r * cfg.reservoir_nodes / n_dev
+    # Chunked-attention KV scan (prefill >8k): QK^T + PV flops, counted for
+    # one chunk only; add the remaining chunks analytically.
+    if info["kind"] == "prefill" and s > 8192:
+        n_attn = sum(1 for blk in cfg.unit if blk.mixer == "attn") * cfg.n_units
+        full = 4.0 * b * s * s * cfg.n_heads * cfg.head_dim  # QK + PV, fwd
+        n_chunks = s // 2048
+        extra += n_attn * full * (n_chunks - 1) / n_chunks / n_dev
+    return extra
+
+
+def analytic_hbm_bytes(cfg, shape: str) -> float:
+    """First-principles per-device HBM traffic for one step.
+
+    XLA-CPU's ``bytes accessed`` counts every producer/consumer pair at CPU
+    fusion granularity (operands + results of each instruction), so it
+    overstates TPU HBM traffic severalfold (a fused producer never
+    round-trips HBM).  This model counts what must move on a TPU:
+
+      train:  optimizer state (p,m,v f32 read+write) + grad accumulation
+              (f32 rw per microbatch) + per-microbatch weight reads (bf16,
+              the TP shard) + activations r/w per layer (±remat reread)
+              + logits (f32)
+      serve:  weight shard read + cache read/write + activations
+    """
+    info = SHAPES[shape]
+    b, s = info["batch"], info["seq"]
+    n_dev, tp = 256, 16
+    p_total = cfg.param_count()
+    p_active = cfg.active_param_count()
+    p_shard = p_total / n_dev
+    d = cfg.d_model
+
+    if info["kind"] == "train":
+        m = cfg.microbatches
+        tok_loc = b * s / m / tp  # per-device tokens per microbatch (data=16)
+        byt = 24.0 * p_shard                       # optimizer p,m,v f32 rw
+        byt += m * 8.0 * p_shard                   # grad accum f32 rw
+        byt += m * 2.0 * (p_active / tp)           # weight reads, bf16 TP shard
+        act_rw = 8.0 * tok_loc * d * 2.0 * cfg.n_layers     # ~8 tensors/layer bf16
+        byt += m * act_rw * 2.0                    # fwd + remat reread in bwd
+        byt += m * tok_loc * (cfg.vocab_size / tp) * 4.0 * 2.0  # logits f32 rw
+        return byt
+
+    tok_loc = (b * s if info["kind"] == "prefill" else b) / tp
+    byt = 2.0 * (p_active / tp)                    # weight shard read, bf16
+    byt += 8.0 * tok_loc * d * 2.0 * cfg.n_layers  # activations
+    # attention caches: full cache read (decode) or write (prefill)
+    kv_bytes = (
+        cfg.attn_layers * b * s * cfg.n_kv_heads * cfg.head_dim * 2 * 2 / n_dev
+        if any(bl.mixer in ("attn", "cross_attn") for bl in cfg.unit) else 0.0
+    )
+    byt += kv_bytes
+    byt += tok_loc * (cfg.vocab_size / tp) * 4.0
+    return byt
+
+
+def model_flops(cfg, shape: str) -> float:
+    """MODEL_FLOPS per the assignment: 6·N·D train, 2·N·D per generated/
+    prefilled token for serving (N = active params)."""
+    info = SHAPES[shape]
+    n = cfg.active_param_count()
+    if info["kind"] == "train":
+        return 6.0 * n * info["batch"] * info["seq"]
+    if info["kind"] == "prefill":
+        return 2.0 * n * info["batch"] * info["seq"]
+    return 2.0 * n * info["batch"]  # decode: one token per sequence
+
+
+def load_cell(arch: str, shape: str, mesh: str = "pod", tag: str = "") -> dict | None:
+    suffix = f"__{tag}" if tag else ""
+    base = DRYRUN_DIR / f"{arch}__{shape}__{mesh}{suffix}.json"
+    calib = DRYRUN_DIR / f"calib__{arch}__{shape}__pod{suffix}.json"
+    if not base.exists():
+        return None
+    rec = json.loads(base.read_text())
+    if calib.exists():
+        rec["calib"] = json.loads(calib.read_text())
+    return rec
+
+
+def analyze_cell(arch: str, shape: str, mesh: str = "pod", tag: str = "") -> dict | None:
+    rec = load_cell(arch, shape, mesh, tag)
+    if rec is None:
+        return None
+    cfg = get_config(arch)
+    n_dev = rec["n_devices"]
+
+    if "calib" in rec:
+        tot = rec["calib"]["total"]
+        flops = tot["flops"] + _analytic_corrections(cfg, shape)
+        bytes_ = tot["bytes"]
+        coll = tot["coll"]
+        source = "calibrated"
+    else:
+        flops, bytes_, coll = rec["flops"], rec["bytes_accessed"], rec["collectives"]["total"]
+        source = "raw(uncalibrated)"
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory_hlo = bytes_ / HBM_BW
+    t_memory = analytic_hbm_bytes(cfg, shape) / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape) / n_dev
+    bound = max(terms.values())
+    return {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh,
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "memory_s_hlo_upper": t_memory_hlo,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": mf / flops if flops else 0.0,
+        # fraction of roofline-attainable achieved if the dominant term fully
+        # overlaps the others (perfect overlap assumption):
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        "hbm_gib": rec["memory"]["temp_bytes"] / 2**30,
+        "source": source,
+    }
+
+
+def run() -> list[str]:
+    rows = []
+    for arch in list_archs(include_extras=True):
+        for shape in runnable_cells(arch):
+            r = analyze_cell(arch, shape)
+            if r is None:
+                continue
+            rows.append(
+                f"roofline/{arch}/{shape},"
+                f"{r['roofline_fraction']:.4f},"
+                f"dom={r['dominant']};comp={r['compute_s']:.2e}s;"
+                f"mem={r['memory_s']:.2e}s;coll={r['collective_s']:.2e}s;"
+                f"useful={r['useful_ratio']:.3f};src={r['source']}"
+            )
+    return rows
+
+
+def markdown_table(mesh: str = "pod") -> str:
+    hdr = ("| arch | shape | compute s | memory s | (HLO mem s) | collective s "
+           "| dominant | MODEL/HLO | roofline frac |\n|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for arch in list_archs(include_extras=True):
+        for shape in runnable_cells(arch):
+            r = analyze_cell(arch, shape, mesh)
+            if r is None:
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+                f"| {r['memory_s_hlo_upper']:.2e} | {r['collective_s']:.2e} "
+                f"| **{r['dominant']}** "
+                f"| {r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} |"
+            )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,47 @@
+"""Benchmark harness entry point: one section per paper table/figure plus the
+roofline analysis.  Prints ``name,value,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of fig5,fig6,fig7,table1,kernels,roofline")
+    args = ap.parse_args()
+
+    from . import fig5_nrmse, fig6_ser, fig7_training_time, kernel_bench, roofline, table1_power
+
+    sections = {
+        "fig5": fig5_nrmse.run,
+        "fig6": fig6_ser.run,
+        "fig7": fig7_training_time.run,
+        "table1": table1_power.run,
+        "kernels": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    chosen = args.only.split(",") if args.only else list(sections)
+    print("name,value,derived")
+    failed = 0
+    for name in chosen:
+        t0 = time.time()
+        try:
+            for row in sections[name]():
+                print(row)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failed += 1
+            print(f"{name}/ERROR,{type(e).__name__},{e}")
+        print(f"{name}/elapsed_s,{time.time()-t0:.1f},", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Table 1 / Eq. (15): power consumption of the photonic accelerators.
+
+The paper quotes 126.48 mW (Silicon MR) vs 549.54 mW (All Optical MZI);
+evaluating Eq. (15) literally reproduces the MR total closely; the MZI total
+depends on whether the wall-plug division applies to its laser (core/power.py
+docstring) — both readings are reported.
+"""
+
+from __future__ import annotations
+
+from repro.core import power
+
+from .common import csv_row
+
+
+def run() -> list[str]:
+    rows = []
+    for spec in (power.SILICON_MR, power.ALL_OPTICAL_MZI):
+        for wp in (True, False):
+            total = spec.total_mw(apply_wall_plug=wp)
+            tag = "wallplug" if wp else "optical-only"
+            rows.append(csv_row(f"table1/{spec.name}/total_mw/{tag}", f"{total:.2f}",
+                                f"paper={power.PAPER_TOTALS_MW[spec.name]}"))
+        br = spec.breakdown_mw()
+        for k, v in br.items():
+            if k != "total":
+                rows.append(csv_row(f"table1/{spec.name}/{k}_mw", f"{v:.3f}", ""))
+    mr = power.SILICON_MR.total_mw()
+    mzi = power.ALL_OPTICAL_MZI.total_mw()
+    rows.append(csv_row("table1/mr_vs_mzi_power_ratio", f"{mzi / mr:.2f}",
+                        "paper=4.34x (549.54/126.48)"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,49 @@
+"""Nonlinear channel equalisation (paper Section V.C.3, Fig. 6).
+
+Sweeps SNR 12-32 dB and plots (as ASCII) the SER of the Silicon-MR DFRC
+against the baselines — the task where the reservoir must invert a
+nonlinear, noisy communication channel.
+
+  PYTHONPATH=src python examples/channel_equalization.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    DFRCAccelerator,
+    DFRCConfig,
+    MZISine,
+    MackeyGlass,
+    SiliconMR,
+    tasks,
+)
+
+SNRS = [12.0, 16.0, 20.0, 24.0, 28.0, 32.0]
+
+accelerators = {
+    "Silicon MR": DFRCConfig(model=SiliconMR(), n_nodes=30, washout=60,
+                             ridge_l2=(1e-10, 1e-8, 1e-6, 1e-4, 1e-2), quantize=True),
+    "Electronic (MG)": DFRCConfig(model=MackeyGlass(), n_nodes=400, washout=60,
+                                  ridge_l2=(1e-10, 1e-8, 1e-6, 1e-4, 1e-2), mask_levels=(-1.0, 1.0), quantize=True),
+    "All Optical (MZI)": DFRCConfig(model=MZISine(), n_nodes=400, washout=60,
+                                    ridge_l2=(1e-10, 1e-8, 1e-6, 1e-4, 1e-2), quantize=True),
+}
+
+table = {}
+for name, cfg in accelerators.items():
+    sers = []
+    for snr in SNRS:
+        ds = tasks.channel_equalization(9000, snr_db=snr, seed=0)
+        acc = DFRCAccelerator(cfg).fit(ds.inputs_train, ds.targets_train)
+        sers.append(acc.evaluate_ser(ds.inputs_test, ds.targets_test))
+    table[name] = sers
+
+print(f"{'SNR(dB)':10s}" + "".join(f"{s:>9.0f}" for s in SNRS))
+for name, sers in table.items():
+    print(f"{name:10.10s}" + "".join(f"{s:>9.4f}" for s in sers))
+
+mean = {n: float(np.mean(s)) for n, s in table.items()}
+print(f"\nmean SER — MR {mean['Silicon MR']:.4f} vs MZI "
+      f"{mean['All Optical (MZI)']:.4f} "
+      f"({100 * (1 - mean['Silicon MR'] / mean['All Optical (MZI)']):.1f}% lower; "
+      f"paper claims 58.8%)")

@@ -1,0 +1,15 @@
+"""Serve a small model with batched requests: prefill + decode loop.
+
+Drives the production serving path (launch/serve.py) for a couple of the
+assigned architectures at reduced width — batched prompts, one prefill, then
+token-by-token decode with a donated KV cache.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+for arch in ["granite-8b", "qwen3-moe-30b-a3b", "xlstm-1.3b"]:
+    print(f"--- {arch} ---")
+    serve_main(["--arch", arch, "--requests", "4", "--prompt-len", "16",
+                "--new-tokens", "8"])

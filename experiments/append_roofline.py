@@ -1,0 +1,52 @@
+"""Append the §Roofline section (full table + hillclimbed variants) to EXPERIMENTS.md."""
+import sys
+sys.path.insert(0, "src"); sys.path.insert(0, ".")
+from benchmarks.roofline import analyze_cell, markdown_table
+
+lines = ["\n## §Roofline — full baseline table (single-pod 16×16, per assignment)\n"]
+lines.append("Terms per device per step; `dominant` judged on the analytic memory")
+lines.append("model (the HLO byte count is the CPU-granularity upper bound, shown in")
+lines.append("parens).  `MODEL/HLO` = 6·N(active)·D / calibrated HLO FLOPs — the")
+lines.append("useful-compute ratio; `roofline frac` = (MODEL_FLOPS/peak) / dominant")
+lines.append("term, i.e. the fraction of ideal step time achieved under perfect")
+lines.append("overlap.  One-line bottleneck notes follow the table.\n")
+lines.append(markdown_table())
+lines.append("""
+Bottleneck notes (what moves the dominant term down):
+- dense train/prefill cells: collective-bound on Megatron-TP activation
+  all-reduces -> the zero3 recipe removes them (hillclimb it-3; variants below).
+- MoE cells: ZeRO expert-weight gathers + token ARs after the it-4 fixes;
+  next lever is caching gathered expert weights across microbatches.
+- decode cells: collective/memory-bound on cache reads + small ARs; fractions
+  are intrinsically low because MODEL_FLOPS for 1 token is tiny vs the cache
+  sweep -- batching (gb=128) is what the serving layer already does.
+- jamba/xlstm: recurrent-state updates are elementwise (low MXU use); their
+  useful ratios reflect scan overhead counted by HLO, not waste.
+- seamless: encoder+cross-attn counted per microbatch; compute-bound at
+  prefill.
+
+### Hillclimbed variants (beyond-paper; §Perf log)
+
+| cell | variant | compute s | memory s | collective s | dominant | frac |
+|---|---|---|---|---|---|---|""")
+for arch, shape, tag in [("granite-8b", "train_4k", "zero3"),
+                         ("qwen3-moe-235b-a22b", "train_4k", "m8"),
+                         ("reservoir_lm", "train_4k", "zero3")]:
+    r = analyze_cell(arch, shape, tag=tag)
+    if r is None:
+        lines.append(f"| {arch} {shape} | {tag} | (missing) | | | | |")
+        continue
+    lines.append(
+        f"| {arch} {shape} | {tag} | {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+        f"| {r['collective_s']:.2e} | {r['dominant']} | **{r['roofline_fraction']:.3f}** |")
+lines.append("""
+(The variant rows use the same calibrated extraction; the MoE row's tagged
+baseline reflects the it-4 framework fixes with M=8 — its collective term
+is an f32-counted upper bound, ≈2× lower in bf16 on TPU.)
+
+Multi-pod (2×16×16) dry-run compiles for every cell prove the "pod" axis
+shards (gradient all-reduce over pod; batch over pod×data); per the
+assignment the roofline table itself is single-pod.
+""")
+open("EXPERIMENTS.md", "a").write("\n".join(lines))
+print("appended", len(lines), "lines")

@@ -1,0 +1,5 @@
+"""Checkpointing: atomic, async, integrity-checked, keep-k, elastic."""
+
+from .store import CheckpointStore
+
+__all__ = ["CheckpointStore"]

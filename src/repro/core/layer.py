@@ -1,0 +1,85 @@
+"""ReservoirMixer: the paper's DFRC dynamics as an LM sequence mixer.
+
+The paper's accelerator processes a scalar time series through one MR node
++ delay loop.  As a framework feature we lift it into the LM stack:
+
+  x [B, S, d]  --fixed random w_in-->  R scalar drive series  (R "wavelengths")
+               --SiliconMR DFR-->      R×N virtual-node states per step
+               --trained readout-->    y [B, S, d]
+
+R parallel reservoirs model WDM multiplexing — R wavelength channels sharing
+one physical MR+waveguide (each λ sees independent dynamics; the natural
+chip-scale scaling axis, DESIGN.md §2).  Following the paper's training
+protocol the *reservoir itself is fixed*: w_in is a non-trainable random
+projection (stop-gradiented buffer) and only the readout is learned.  The
+mixer is causal and O(S·N·R) — linear in sequence length, which is what
+makes the ``reservoir_lm`` config runnable at ``long_500k``.
+
+Decode carries (s_prev [B,R,N], s_last [B,R]) — O(N·R) per token.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .masking import make_mask
+from .nonlinear import SiliconMR
+
+
+def reservoir_defs(cfg) -> dict:
+    d, n, r = cfg.d_model, cfg.reservoir_nodes, _n_channels(cfg)
+
+    def w_in_init(k, shape):
+        return jax.random.normal(k, shape, jnp.float32) / math.sqrt(shape[0])
+
+    return {
+        "w_in": ((d, r), ("embed", None), w_in_init),         # fixed (not trained)
+        "readout": ((r * n, d), (None, "embed"), "zeros"),    # the trained W_out
+        "readout_bias": ((d,), ("embed",), "zeros"),
+    }
+
+
+def _n_channels(cfg) -> int:
+    return max(1, cfg.d_model // cfg.reservoir_nodes)
+
+
+def _model(cfg) -> SiliconMR:
+    return SiliconMR(
+        theta_ps=50.0,
+        tau_ph_ps=50.0 / cfg.reservoir_alpha_ratio,
+        gamma=cfg.reservoir_gamma,
+    )
+
+
+def apply_reservoir(cfg, p, x, *, cache=None):
+    """x [B,S,d] -> (y [B,S,d], new_cache).  cache=(s_prev [B,R,N], s_last [B,R])."""
+    dt = x.dtype
+    n, r = cfg.reservoir_nodes, _n_channels(cfg)
+    b, s, _ = x.shape
+    mdl = _model(cfg)
+    mask = make_mask(n, seed=1).astype(jnp.float32)
+
+    # Fixed random drive; squash to the optical intensity range [0, 1].
+    w_in = jax.lax.stop_gradient(p["w_in"])
+    j = jax.nn.sigmoid((x.astype(jnp.float32) @ w_in))        # [B,S,R]
+
+    if cache is None:
+        s_prev = jnp.zeros((b, r, n), jnp.float32)
+        s_last = jnp.zeros((b, r), jnp.float32)
+    else:
+        s_prev, s_last = cache
+
+    def period(carry, j_t):
+        sp, sl = carry  # [B,R,N], [B,R]
+        u_t = j_t[..., None] * mask                           # [B,R,N]
+        s_new = mdl.period_update(u_t, sp, sl)
+        return (s_new, s_new[..., -1]), s_new
+
+    (s_prev, s_last), states = jax.lax.scan(period, (s_prev, s_last), jnp.moveaxis(j, 1, 0))
+    states = jnp.moveaxis(states, 0, 1).reshape(b, s, r * n)  # [B,S,R·N]
+
+    y = (states.astype(dt) @ p["readout"].astype(dt)) + p["readout_bias"].astype(dt)
+    return y, (s_prev, s_last)

@@ -1,0 +1,110 @@
+"""Input pre-processing for DFRC: sample-and-hold + binary masking.
+
+The paper (Section III.A / V.A) masks the sampled-and-held input j(t) with a
+periodic binary mask m(t) built from a maximum-length sequence (MLS), per
+Appeltant et al., "Constructing optimized binary masks for reservoir computing
+with delay systems", Sci. Rep. 4, 3629 (2014) [paper ref 25].  The mask plays
+the role of the fixed random input weights W_in: node i of every period sees
+input u[k, i] = j[k] * m[i].
+
+MLS are generated with a Fibonacci LFSR over GF(2) using primitive-polynomial
+taps, giving a pseudo-random ±1 sequence of period 2**m - 1 with ideal
+autocorrelation.  For N virtual nodes we take the first N entries of the
+smallest MLS with period >= N (Appeltant et al. do the same truncation).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# Primitive polynomial taps (1-indexed bit positions fed back, Fibonacci LFSR)
+# for register lengths 2..16.  Standard tables (Xilinx XAPP052 / Golomb).
+_PRIMITIVE_TAPS: dict[int, tuple[int, ...]] = {
+    2: (2, 1),
+    3: (3, 2),
+    4: (4, 3),
+    5: (5, 3),
+    6: (6, 5),
+    7: (7, 6),
+    8: (8, 6, 5, 4),
+    9: (9, 5),
+    10: (10, 7),
+    11: (11, 9),
+    12: (12, 11, 10, 4),
+    13: (13, 12, 11, 8),
+    14: (14, 13, 12, 2),
+    15: (15, 14),
+    16: (16, 15, 13, 4),
+}
+
+
+def mls_sequence(m: int, *, init_state: int = 1) -> np.ndarray:
+    """Return one full period (2**m - 1) of a maximum-length ±1 sequence.
+
+    Galois-form LFSR: on emitting a 1, the polynomial mask (primitive taps)
+    is XORed into the shifted state — cycles through all 2**m − 1 nonzero
+    states for a primitive polynomial regardless of the seed.
+    """
+    if m not in _PRIMITIVE_TAPS:
+        raise ValueError(f"no primitive taps tabulated for m={m}")
+    if not 0 < init_state < 2**m:
+        raise ValueError("init_state must be a nonzero m-bit value")
+    mask = 0
+    for t in _PRIMITIVE_TAPS[m]:
+        mask |= 1 << (t - 1)
+    state = init_state
+    out = np.empty(2**m - 1, dtype=np.int8)
+    for i in range(out.shape[0]):
+        lsb = state & 1
+        out[i] = 1 if lsb else -1
+        state >>= 1
+        if lsb:
+            state ^= mask
+    return out
+
+
+def make_mask(
+    n_nodes: int,
+    *,
+    levels: tuple[float, float] = (0.0, 1.0),
+    seed: int = 1,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Binary MLS mask of length ``n_nodes`` with values ``levels``.
+
+    ``levels = (lo, hi)`` maps the MLS -1 -> lo and +1 -> hi.  The default
+    keeps the masked optical signal non-negative (an optical intensity cannot
+    go below zero); a photonic implementation realises the two levels with
+    two drive amplitudes of the input MR modulator.  Electronic devices may
+    use bipolar levels, e.g. ``(-1.0, 1.0)`` for 'Electronic (MG)'.  ``seed``
+    rotates the MLS, selecting a different (but still MLS-autocorrelation)
+    mask.
+    """
+    if n_nodes < 1:
+        raise ValueError("n_nodes must be >= 1")
+    m = 2
+    while 2**m - 1 < n_nodes:
+        m += 1
+    seq = mls_sequence(m, init_state=(seed % (2**m - 1)) + 1)
+    seq = np.roll(seq, seed // (2**m - 1))[:n_nodes]
+    lo, hi = levels
+    vals = np.where(seq > 0, hi, lo).astype(np.float32)
+    return jnp.asarray(vals, dtype=dtype)
+
+
+def sample_and_hold(series: jnp.ndarray) -> jnp.ndarray:
+    """Identity for discrete-time tasks: each sample j[k] is held for one τ.
+
+    Kept as an explicit (documented) stage so the pipeline mirrors the paper's
+    Fig. 2(a); continuous-time front-ends would resample here.
+    """
+    return jnp.asarray(series)
+
+
+def masked_input(j: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """u[..., k, i] = j[..., k] * m[i]  (paper Eq. (2)).
+
+    ``j`` has shape [..., K] (K samples); result [..., K, N].
+    """
+    return j[..., :, None] * mask[None, :]

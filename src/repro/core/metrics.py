@@ -1,0 +1,29 @@
+"""Error metrics (paper Section V.B)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def nrmse(y_true, y_pred) -> float:
+    """Normalised root-mean-square error, paper Eq. (8).
+
+    NRMSE = sqrt( Σ (y - ŷ)² / (N · σ²_y) ) — normalised by the *target*
+    variance, so a constant predictor at the target mean scores 1.0.
+    """
+    y_true = np.asarray(y_true, dtype=np.float64)
+    y_pred = np.asarray(y_pred, dtype=np.float64)
+    var = np.var(y_true)
+    return float(np.sqrt(np.mean((y_true - y_pred) ** 2) / (var + 1e-300)))
+
+
+def ser(symbols_true, symbols_pred) -> float:
+    """Symbol error rate: fraction of incorrectly reproduced symbols.
+
+    Paper Eq. (9) as printed reads 'correct / total'; the standard metric
+    (and the paper's Fig. 6, where lower is better) is 'incorrect / total' —
+    we use the standard (DESIGN.md §7).
+    """
+    t = np.asarray(symbols_true)
+    p = np.asarray(symbols_pred)
+    return float(np.mean(t != p))

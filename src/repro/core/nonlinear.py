@@ -1,0 +1,268 @@
+"""Nonlinear (NL) node models for delayed-feedback reservoirs.
+
+Four devices; the first three match the paper's evaluation (Section V.A):
+
+* :class:`SiliconMR`      — the paper's contribution: an active silicon
+  microring resonator's TPA drop-port response, paper Eq. (6-7) under the
+  θ-corrected reading (below).  'Silicon MR'.
+* :class:`MackeyGlass`    — Appeltant et al., Nat. Commun. 2, 468 (2011)
+  [paper ref 19].  'Electronic (MG)'.
+* :class:`MZISine`        — Duport et al., Sci. Rep. 6, 22381 (2016)
+  [paper ref 20] (sin^2 intensity response).  'All Optical (MZI)'.
+* :class:`SiliconMRLiteral` — paper Eq. (6-7) *exactly as printed*.  Kept as
+  an ablation: the printed recurrence is exponentially unstable (see below),
+  which tests/benchmarks demonstrate; it is not used for headline numbers.
+
+The θ-corrected reading (DESIGN.md §7)
+--------------------------------------
+Eq. (6-7) as printed add the τ-delayed state ``s(t−τ)`` as the relaxation
+term.  That makes the charge branch an affine map with multiplier
+``1 + γ·α > 1`` on ``s(t−τ)`` whose branch condition compares ``u(t)``
+against the *neighbouring* node ``s(t−θ)`` — nothing limits repeated
+charging, and the dynamics diverge for every useful γ (verified: NRMSE = inf
+for γ ≥ 0.1 on NARMA10; tests/test_paper_claims.py).  The DFR literature the
+paper builds on (Appeltant 2011, Eq. (1) discretised) relaxes each node from
+its *own previous state one θ earlier* and injects the delayed feedback
+through the drive.  Reading Eq. (6-7)'s relaxation term as ``s(t−θ)`` —
+a one-symbol typo — recovers exactly that structure and a bounded, fading
+memory system:
+
+    P(t)  = u(t) + γ·s(t−τ)                      (drive: input + feedback)
+    D(t)  = P / (1 + β_tpa·P)                    (TPA-saturated drop power)
+    α     = 1 − exp(−θ/τ_ph)                     (photon-lifetime response)
+    s(t) = α·D + s(t−θ)          if u(t) > s(t−θ)   (fast charge, Eq. 6)
+    s(t) = α·D + (1−α)·s(t−θ)    if u(t) ≤ s(t−θ)   (relaxed discharge, Eq. 7)
+
+β_tpa = 0 keeps the published form (the branch asymmetry is then the only
+nonlinearity — the map is positively homogeneous); β_tpa > 0 adds the
+power-dependent two-photon-absorption loss the paper attributes the MR's
+"rich nonlinearity" to (Section III.B).  Headline configs use β_tpa = 0.
+
+Interface (shared by all models) over virtual nodes: with K input periods
+(one τ each) and N virtual nodes (one θ slot each, τ = N·θ):
+
+``node_update(u, s_tau, s_prev_node)``
+    Elementwise update for one virtual node: ``u`` is the masked input for
+    this node in this period, ``s_tau`` the same node's state one τ earlier,
+    ``s_prev_node`` the immediately preceding node's state (θ earlier).
+    This is the *sequential* physical evolution (the oracle).
+
+``period_update(u_k, s_prev, s_last)``
+    Whole-period update: ``u_k`` [..., N], ``s_prev`` [..., N] (the previous
+    period), ``s_last`` [...] (state of node N-1 of the previous period).
+    Exactly equal to chaining ``node_update`` over the node axis; evaluated
+
+      - SiliconMR: sequentially (``lax.scan`` over nodes) — the realised
+        branch bit feeds the *value* of the next node, which is not an
+        associative recurrence.  Parallelism is over the batch axis
+        (the Pallas kernel tiles batch lanes in VMEM; kernels/dfr_scan).
+      - SiliconMRLiteral: O(log N) — the θ-chain enters only through the
+        branch *condition*; condition bits propagate as {0,1}→{0,1} boolean
+        transition functions composed with ``jax.lax.associative_scan``.
+      - MackeyGlass: O(log N) — the θ-chain is an *affine* recurrence
+        x_i = a_i + c·x_{i-1}; affine maps compose associatively.
+      - MZISine: no θ-chain (Duport's synchronised regime) — elementwise.
+
+Models are frozen dataclasses of Python floats: hashable statics that can be
+closed over by jit without retracing hazards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _compose_bool(f, g):
+    """Compose boolean transition functions represented as (out_if_0, out_if_1).
+
+    Returns h = g ∘ f (f applied first), i.e. h(x) = g(f(x)).
+    """
+    f0, f1 = f
+    g0, g1 = g
+    h0 = jnp.where(f0, g1, g0)
+    h1 = jnp.where(f1, g1, g0)
+    return h0, h1
+
+
+def _compose_affine(p, q):
+    """Compose affine maps (m, a): x -> a + m·x.  Returns q ∘ p."""
+    m1, a1 = p
+    m2, a2 = q
+    return m1 * m2, a2 + m2 * a1
+
+
+@dataclasses.dataclass(frozen=True)
+class SiliconMR:
+    """Active microring TPA charging/discharging map — paper Eq. (6-7),
+    θ-corrected reading (module docstring).
+
+    τ_ph is set by the MR Q-factor (reverse-biased PN junction, paper
+    Section IV.B); the paper's operating point is τ_ph = 50 ps with
+    θ = 50 ps (N = 900, τ = 45 ns for NARMA10).  γ is the round-trip power
+    attenuation of the feedback waveguide (coupler + splitter + propagation;
+    not specified in the paper — 0.9 assumes the quoted low-loss devices).
+    β_tpa ≥ 0 strengthens the TPA saturation of the intracavity drive.
+    """
+
+    theta_ps: float = 50.0
+    tau_ph_ps: float = 50.0
+    gamma: float = 0.9
+    beta_tpa: float = 0.0
+
+    name: str = dataclasses.field(default="Silicon MR", repr=False)
+
+    @property
+    def alpha(self) -> float:
+        return 1.0 - math.exp(-self.theta_ps / self.tau_ph_ps)
+
+    def _drive(self, u, s_tau):
+        p = u + self.gamma * s_tau
+        if self.beta_tpa:
+            p = p / (1.0 + self.beta_tpa * p)
+        return jnp.asarray(self.alpha, u.dtype) * p
+
+    # -- sequential (physical) ------------------------------------------------
+    def node_update(self, u, s_tau, s_prev_node):
+        a = jnp.asarray(self.alpha, u.dtype)
+        pre = self._drive(u, s_tau)
+        charge = pre + s_prev_node               # Eq. (6), θ-corrected
+        discharge = pre + s_prev_node * (1.0 - a)  # Eq. (7), θ-corrected
+        return jnp.where(u > s_prev_node, charge, discharge)
+
+    # -- whole period (node chain is inherently sequential here) --------------
+    def period_update(self, u_k, s_prev, s_last):
+        pre = self._drive(u_k, s_prev)  # [..., N] — parallel over batch
+        a = jnp.asarray(self.alpha, u_k.dtype)
+
+        def node(s_pn, xs):
+            u_i, pre_i = xs  # [...], [...]
+            s_i = jnp.where(u_i > s_pn, pre_i + s_pn, pre_i + s_pn * (1.0 - a))
+            return s_i, s_i
+
+        xs = (jnp.moveaxis(u_k, -1, 0), jnp.moveaxis(pre, -1, 0))  # [N, ...]
+        _, s_nodes = jax.lax.scan(node, s_last, xs)
+        return jnp.moveaxis(s_nodes, 0, -1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SiliconMRLiteral:
+    """Paper Eq. (6-7) exactly as printed (relaxation from s(t−τ)).
+
+    Unstable: the charge branch multiplies s(t−τ) by (1 + γ·α) > 1 and its
+    condition tests the *neighbour's* state, so nodes following a low-masked
+    neighbour charge without bound (demonstrated in tests + EXPERIMENTS.md).
+    Retained for the faithfulness ablation; within one period the node chain
+    enters only through the branch bit, so the period update runs in
+    O(log N) depth via an associative scan over boolean transition functions.
+    """
+
+    theta_ps: float = 50.0
+    tau_ph_ps: float = 50.0
+    gamma: float = 0.9
+
+    name: str = dataclasses.field(default="Silicon MR (literal)", repr=False)
+
+    @property
+    def alpha(self) -> float:
+        return 1.0 - math.exp(-self.theta_ps / self.tau_ph_ps)
+
+    def _candidates(self, u, s_tau):
+        a = jnp.asarray(self.alpha, u.dtype)
+        pre = (u + self.gamma * s_tau) * a
+        charge = pre + s_tau                 # Eq. (6) as printed
+        discharge = pre + s_tau * (1.0 - a)  # Eq. (7) as printed
+        return charge, discharge
+
+    def node_update(self, u, s_tau, s_prev_node):
+        charge, discharge = self._candidates(u, s_tau)
+        return jnp.where(u > s_prev_node, charge, discharge)
+
+    def period_update(self, u_k, s_prev, s_last):
+        charge, discharge = self._candidates(u_k, s_prev)
+        # Branch bit for node i given the *realised* bit of node i-1:
+        #   prev bit 1 => s_{i-1} = charge[i-1];  prev bit 0 => discharge[i-1].
+        prev_c = jnp.concatenate([s_last[..., None], charge[..., :-1]], axis=-1)
+        prev_d = jnp.concatenate([s_last[..., None], discharge[..., :-1]], axis=-1)
+        out_if_0 = u_k > prev_d
+        out_if_1 = u_k > prev_c
+        # Node 0 sees the known s_last in both slots -> constant function, so
+        # the scanned prefix composition is independent of the seed bit.
+        bits, _ = jax.lax.associative_scan(_compose_bool, (out_if_0, out_if_1), axis=-1)
+        return jnp.where(bits, charge, discharge)
+
+
+@dataclasses.dataclass(frozen=True)
+class MackeyGlass:
+    """Appeltant et al. (2011) single-node electronic DFR ('Electronic (MG)').
+
+    Delay differential equation  T·ẋ = -x + η·X/(1 + X^p),
+    X = x(t-τ) + γ·J(t), integrated exactly over one θ slot assuming the
+    drive is constant within the slot:
+
+        x_i(k) = e^{-θ/T}·x_{i-1}(k) + (1 - e^{-θ/T})·η·X/(1 + |X|^p).
+
+    Defaults follow Appeltant et al.'s NARMA10 point: p = 7, θ = 0.2·T
+    (virtual nodes deliberately spaced inside the relaxation time so
+    neighbouring nodes couple), (η, γ) tuned per task on the training split
+    (values recorded in repro/configs/dfrc_*.py).  τ = 10 ms class hardware —
+    the training-time model (timing.py) uses that.
+    """
+
+    eta: float = 0.75
+    gamma_in: float = 0.15
+    p: float = 7.0
+    theta_over_T: float = 0.2
+
+    name: str = dataclasses.field(default="Electronic (MG)", repr=False)
+
+    @property
+    def decay(self) -> float:
+        return math.exp(-self.theta_over_T)
+
+    def _drive(self, u, s_tau):
+        x = s_tau + self.gamma_in * u
+        return self.eta * x / (1.0 + jnp.abs(x) ** self.p)
+
+    def node_update(self, u, s_tau, s_prev_node):
+        c = jnp.asarray(self.decay, u.dtype)
+        return c * s_prev_node + (1.0 - c) * self._drive(u, s_tau)
+
+    def period_update(self, u_k, s_prev, s_last):
+        c = jnp.asarray(self.decay, u_k.dtype)
+        a = (1.0 - c) * self._drive(u_k, s_prev)
+        m = jnp.broadcast_to(c, a.shape)
+        mm, aa = jax.lax.associative_scan(_compose_affine, (m, a), axis=-1)
+        return aa + mm * s_last[..., None]
+
+
+@dataclasses.dataclass(frozen=True)
+class MZISine:
+    """Duport et al. (2016) fibre-spool analogue photonic DFR ('All Optical (MZI)').
+
+    Intensity response of the MZI modulator in the loop:
+        x_i(k) = sin²(φ + β·u_i(k) + α·x_i(k-1)).
+    Synchronised regime: no θ coupling between neighbouring virtual nodes.
+    τ = 7.56 µs (1.7 km fibre spool) — used by timing.py.  Operating point
+    (φ near quadrature-off, weak drive) tuned like the other devices.
+    """
+
+    alpha_fb: float = 0.8
+    beta_in: float = 0.1
+    phi: float = 0.1 * math.pi
+
+    name: str = dataclasses.field(default="All Optical (MZI)", repr=False)
+
+    def node_update(self, u, s_tau, s_prev_node):
+        del s_prev_node
+        return jnp.sin(self.phi + self.beta_in * u + self.alpha_fb * s_tau) ** 2
+
+    def period_update(self, u_k, s_prev, s_last):
+        del s_last
+        return self.node_update(u_k, s_prev, None)
+
+
+NLModel = SiliconMR | SiliconMRLiteral | MackeyGlass | MZISine

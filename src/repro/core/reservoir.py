@@ -1,0 +1,114 @@
+"""Delayed-feedback reservoir (DFR) state generation.
+
+Produces the N virtual-node states for every input period (paper Fig. 2(b),
+Eq. (1-2)).  Three interchangeable execution paths:
+
+* ``method="ref"``    — nested ``lax.scan`` over periods × nodes: the node
+  chain is evaluated strictly sequentially, exactly as the physical device
+  evolves in time.  This is the oracle every other path is tested against.
+* ``method="fast"``   — ``lax.scan`` over periods, O(log N) associative-scan
+  parallelism inside each period (see nonlinear.py docstring).  Pure jnp; the
+  default on CPU and the building block the LM-side ReservoirMixer uses.
+* ``method="kernel"`` — the Pallas TPU kernel (kernels/dfr_scan), which fuses
+  masking + candidate computation + the in-period scan, tiled in VMEM.
+
+All paths take the *unmasked* sample series ``j`` [..., K] plus the mask [N]
+and return states [..., K, N].
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .masking import masked_input
+from .nonlinear import NLModel
+
+
+def init_state(model: NLModel, batch_shape: tuple[int, ...], n_nodes: int, dtype=jnp.float32):
+    """Zero initial reservoir state (dark waveguide / discharged node)."""
+    del model
+    return jnp.zeros((*batch_shape, n_nodes), dtype=dtype)
+
+
+def _canon(j: jnp.ndarray) -> tuple[jnp.ndarray, bool]:
+    """Canonicalise j to [B, K]; report whether a batch dim was added."""
+    j = jnp.asarray(j)
+    if j.ndim == 1:
+        return j[None, :], True
+    if j.ndim == 2:
+        return j, False
+    raise ValueError(f"j must be [K] or [B, K], got shape {j.shape}")
+
+
+@partial(jax.jit, static_argnames=("model",))
+def _states_ref(model: NLModel, u: jnp.ndarray, s0: jnp.ndarray) -> jnp.ndarray:
+    """u: [B, K, N], s0: [B, N] -> [B, K, N].  Sequential oracle."""
+
+    def period(carry, u_k):
+        s_prev, s_last = carry  # [B, N], [B]
+
+        def node(s_prev_node, xs):
+            u_i, s_tau_i = xs  # [B], [B]
+            s_i = model.node_update(u_i, s_tau_i, s_prev_node)
+            return s_i, s_i
+
+        xs = (jnp.moveaxis(u_k, -1, 0), jnp.moveaxis(s_prev, -1, 0))  # [N, B]
+        s_last_new, s_nodes = jax.lax.scan(node, s_last, xs)
+        s_new = jnp.moveaxis(s_nodes, 0, -1)  # [B, N]
+        return (s_new, s_last_new), s_new
+
+    (_, _), states = jax.lax.scan(period, (s0, s0[..., -1]), jnp.moveaxis(u, 1, 0))
+    return jnp.moveaxis(states, 0, 1)
+
+
+@partial(jax.jit, static_argnames=("model",))
+def _states_fast(model: NLModel, u: jnp.ndarray, s0: jnp.ndarray) -> jnp.ndarray:
+    """u: [B, K, N], s0: [B, N] -> [B, K, N].  Parallel-in-period."""
+
+    def period(carry, u_k):
+        s_prev, s_last = carry
+        s_new = model.period_update(u_k, s_prev, s_last)
+        return (s_new, s_new[..., -1]), s_new
+
+    (_, _), states = jax.lax.scan(period, (s0, s0[..., -1]), jnp.moveaxis(u, 1, 0))
+    return jnp.moveaxis(states, 0, 1)
+
+
+def generate_states(
+    model: NLModel,
+    j: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    s0: jnp.ndarray | None = None,
+    method: str = "fast",
+) -> jnp.ndarray:
+    """DFR states for sample series ``j`` [..., K] -> [..., K, N].
+
+    ``method``: "fast" (default), "ref" (sequential oracle) or "kernel"
+    (Pallas; interpret-mode on CPU).
+    """
+    jb, squeeze = _canon(j)
+    n_nodes = int(mask.shape[-1])
+    if s0 is None:
+        s0b = init_state(model, (jb.shape[0],), n_nodes, dtype=jb.dtype)
+    else:
+        s0b = jnp.asarray(s0)
+        if s0b.ndim == 1:
+            s0b = jnp.broadcast_to(s0b[None], (jb.shape[0], n_nodes))
+
+    if method == "kernel":
+        from repro.kernels.dfr_scan import ops as dfr_ops
+
+        states = dfr_ops.dfr_scan(model, jb, mask, s0b)
+    else:
+        u = masked_input(jb, mask)
+        if method == "ref":
+            states = _states_ref(model, u, s0b)
+        elif method == "fast":
+            states = _states_fast(model, u, s0b)
+        else:
+            raise ValueError(f"unknown method {method!r}")
+    return states[0] if squeeze else states

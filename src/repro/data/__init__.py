@@ -1,0 +1,5 @@
+"""Data: deterministic host-sharded synthetic streams + the paper's tasks."""
+
+from .pipeline import DataConfig, Prefetcher, host_batch
+
+__all__ = ["DataConfig", "Prefetcher", "host_batch"]

@@ -1,0 +1,50 @@
+"""Public jit'd wrapper for the DFR scan Pallas kernel.
+
+Canonicalises [B, K] batches into the kernel's (S sublanes × 128 lanes)
+tiling, pads the batch to a tile boundary, and restores [B, K, N] on the way
+out.  On non-TPU backends the kernel runs in interpret mode (CPU-validated,
+TPU-targeted); ``interpret`` can be forced either way.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .dfr_scan import LANES, dfr_scan_tiled
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def dfr_scan(
+    model,
+    j: jnp.ndarray,      # [B, K]
+    mask: jnp.ndarray,   # [N]
+    s0: jnp.ndarray,     # [B, N]
+    *,
+    block_s: int = 8,
+    interpret: bool | None = None,
+) -> jnp.ndarray:        # [B, K, N]
+    if interpret is None:
+        interpret = _auto_interpret()
+    j = jnp.asarray(j)
+    b, k_periods = j.shape
+    n_nodes = int(mask.shape[-1])
+
+    tile = block_s * LANES
+    b_pad = -b % tile
+    jp = jnp.pad(j, ((0, b_pad), (0, 0)))
+    s0p = jnp.pad(jnp.asarray(s0, j.dtype), ((0, b_pad), (0, 0)))
+    s_total = (b + b_pad) // LANES
+
+    # [B, K] -> [K, S, L];  [B, N] -> [N, S, L]
+    jt = jp.T.reshape(k_periods, s_total, LANES)
+    s0t = s0p.T.reshape(n_nodes, s_total, LANES)
+    maskt = jnp.asarray(mask, j.dtype).reshape(n_nodes, 1)
+
+    out = dfr_scan_tiled(model, jt, maskt, s0t, block_s=block_s, interpret=interpret)
+    # [K, N, S, L] -> [B, K, N]
+    out = out.reshape(k_periods, n_nodes, s_total * LANES)
+    return jnp.moveaxis(out, -1, 0)[:b]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the DFR scan kernel.
+
+Masks the sample series and chains ``model.node_update`` strictly
+sequentially over (periods × nodes) — the physical device evolution.
+Shapes: j [B, K], mask [N], s0 [B, N] -> states [B, K, N].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dfr_scan_ref(model, j: jnp.ndarray, mask: jnp.ndarray, s0: jnp.ndarray) -> jnp.ndarray:
+    j = jnp.asarray(j)
+    mask = jnp.asarray(mask, j.dtype)
+    s0 = jnp.asarray(s0, j.dtype)
+    u = j[..., :, None] * mask  # [B, K, N]
+
+    def period(carry, u_k):
+        s_prev, s_last = carry  # [B, N], [B]
+
+        def node(s_pn, xs):
+            u_i, s_tau_i = xs
+            s_i = model.node_update(u_i, s_tau_i, s_pn)
+            return s_i, s_i
+
+        xs = (jnp.moveaxis(u_k, -1, 0), jnp.moveaxis(s_prev, -1, 0))
+        s_last_new, s_nodes = jax.lax.scan(node, s_last, xs)
+        s_new = jnp.moveaxis(s_nodes, 0, -1)
+        return (s_new, s_last_new), s_new
+
+    (_, _), states = jax.lax.scan(period, (s0, s0[..., -1]), jnp.moveaxis(u, 1, 0))
+    return jnp.moveaxis(states, 0, 1)

@@ -1,0 +1,5 @@
+from . import ops, ref
+from .ops import gram_accumulate
+from .ref import gram_ref
+
+__all__ = ["gram_accumulate", "gram_ref", "ops", "ref"]

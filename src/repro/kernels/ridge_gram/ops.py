@@ -1,0 +1,41 @@
+"""Public jit'd wrapper for the Gram accumulation Pallas kernel.
+
+Pads T and F to tile boundaries (zero rows/cols contribute nothing to XᵀX)
+and strips the padding from the outputs.  Interpret mode off-TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ridge_gram import gram_tiled
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gram_accumulate(
+    x: jnp.ndarray,  # [T, F]
+    y: jnp.ndarray,  # [T] or [T, C]
+    *,
+    block_t: int = 512,
+    block_f: int = 128,
+    interpret: bool | None = None,
+):
+    """Return (G = XᵀX [F, F] f32, c = XᵀY [F, C] f32) in one pass."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    if y.ndim == 1:
+        y = y[:, None]
+    t, f = x.shape
+    block_t = min(block_t, max(8, t))
+    t_pad = -t % block_t
+    f_pad = -f % block_f
+    xp = jnp.pad(x, ((0, t_pad), (0, f_pad)))
+    yp = jnp.pad(y.astype(x.dtype), ((0, t_pad), (0, 0)))
+    g, c = gram_tiled(xp, yp, block_t=block_t, block_f=block_f, interpret=interpret)
+    return g[:f, :f], c[:f]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the streaming Gram/moment accumulation kernel.
+
+X [T, F], Y [T, C]  ->  G = XᵀX [F, F],  c = XᵀY [F, C], accumulated in f32.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_ref(x: jnp.ndarray, y: jnp.ndarray):
+    x32 = x.astype(jnp.float32)
+    y32 = y.astype(jnp.float32)
+    return x32.T @ x32, x32.T @ y32

@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is ordinary code.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16×16, or 2×16×16 multi-pod),
+  2. constructs ShapeDtypeStruct stand-ins for every input (no allocation),
+  3. ``jax.jit(step, in_shardings, out_shardings).lower(...).compile()``,
+  4. records ``memory_analysis()`` (proves the cell fits HBM),
+     ``cost_analysis()`` (FLOPs / bytes for §Roofline), and a parse of the
+     compiled HLO summing collective operand bytes,
+  5. writes ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all            # every runnable cell
+  python -m repro.launch.dryrun --all --mesh multipod
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, input_specs, list_archs, runnable_cells, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.optim import AdamWConfig
+from repro.parallel.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    data_pspecs,
+    param_pspecs,
+)
+from repro.runtime.steps import serve_decode, serve_prefill, train_step
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(\w+\[[\d,]*\](?:\{[^}]*\})?|\((?:[^()]*)\))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective kind (ring-algorithm estimate).
+
+    Result-shape convention: for a collective whose HLO result shape is r
+    over a group of size n —
+      all-reduce          2·r·(n−1)/n      (reduce-scatter + all-gather ring)
+      all-gather          r·(n−1)/n        (each device receives r − its shard)
+      reduce-scatter      r·(n−1)          (operand = r·n, sends (n−1) shards)
+      all-to-all          r·(n−1)/n
+      collective-permute  r
+    """
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_txt, kind = m.group(1), m.group(2).lower()
+        r = _shape_bytes(shape_txt)
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.end(): line_end if line_end > 0 else m.end() + 2000]
+        g = _GROUPS_RE.search(line)
+        n = len(g.group(1).split(",")) if g else 2
+        if kind == "all-reduce":
+            wire = 2.0 * r * (n - 1) / n
+        elif kind == "all-gather":
+            wire = r * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = float(r) * (n - 1)
+        elif kind == "all-to-all":
+            wire = r * (n - 1) / n
+        else:  # collective-permute
+            wire = float(r)
+        out[kind] = out.get(kind, 0.0) + wire
+        count[kind] = count.get(kind, 0) + 1
+    out["total"] = sum(out.values())
+    out["counts"] = count
+    return out
+
+
+def build_step(cfg, shape: str, mesh, specs=None):
+    """Returns (jitted step fn, kwargs of ShapeDtypeStructs).
+
+    ``specs`` overrides the assignment-shape input specs (used by the
+    calibration variants, which lower at microbatch-sized batches)."""
+    kind = SHAPES[shape]["kind"]
+    if specs is None:
+        specs = input_specs(cfg, shape)
+
+    if kind == "train":
+        opt_cfg = AdamWConfig()
+        state_shapes = jax.eval_shape(
+            lambda: __import__("repro.runtime.steps", fromlist=["init_train_state"]).init_train_state(
+                cfg, jax.random.PRNGKey(0)
+            )
+        )
+        pspecs = param_pspecs(cfg, mesh)
+        state_specs = {
+            "params": pspecs,
+            "opt": {"m": pspecs, "v": pspecs},
+            "step": jax.sharding.PartitionSpec(),
+        }
+        batch_specs = data_pspecs(cfg, mesh, specs)
+
+        def step(state, batch):
+            return train_step(cfg, opt_cfg, state, batch)
+
+        fn = jax.jit(
+            step,
+            in_shardings=(state_specs, batch_specs),
+            out_shardings=(state_specs, None),
+            donate_argnums=(0,),
+        )
+        args = ({"params": state_shapes["params"], "opt": state_shapes["opt"],
+                 "step": state_shapes["step"]}, specs)
+        return fn, args
+
+    pspecs = param_pspecs(cfg, mesh)
+    params_shapes = jax.eval_shape(
+        lambda: __import__("repro.models", fromlist=["init_params"]).init_params(
+            cfg, jax.random.PRNGKey(0)
+        )
+    )
+
+    if kind == "prefill":
+        bspec = {k: batch_pspec(mesh, rank=len(v.shape)) for k, v in specs.items()}
+        has_ctx = "context" in specs
+        if has_ctx:
+            cache_shapes = jax.eval_shape(
+                lambda p, t, c: serve_prefill(cfg, p, t, c),
+                params_shapes, specs["tokens"], specs["context"],
+            )[1]
+        else:
+            cache_shapes = jax.eval_shape(
+                lambda p, t: serve_prefill(cfg, p, t),
+                params_shapes, specs["tokens"],
+            )[1]
+        out_cache_spec = cache_pspecs(cfg, mesh, cache_shapes)
+
+        def step(params, tokens, context=None):
+            return serve_prefill(cfg, params, tokens, context)
+
+        in_sh = (pspecs, bspec["tokens"]) + ((bspec["context"],) if has_ctx else ())
+        fn = jax.jit(step, in_shardings=in_sh,
+                     out_shardings=(batch_pspec(mesh), out_cache_spec))
+        args = (params_shapes, specs["tokens"]) + ((specs["context"],) if has_ctx else ())
+        return fn, args
+
+    if kind == "decode":
+        cache_spec = cache_pspecs(cfg, mesh, specs["cache"])
+        tok_rank = len(specs["tokens"].shape)
+        b = specs["tokens"].shape[0]
+        b_total = 1
+        for a in ("pod", "data"):
+            if a in mesh.shape:
+                b_total *= mesh.shape[a]
+        tok_spec = batch_pspec(mesh, rank=tok_rank) if b % b_total == 0 else \
+            jax.sharding.PartitionSpec(*([None] * tok_rank))
+
+        def step(params, cache, tokens):
+            return serve_decode(cfg, params, cache, tokens)
+
+        fn = jax.jit(
+            step,
+            in_shardings=(pspecs, cache_spec, tok_spec),
+            out_shardings=(tok_spec, cache_spec),
+            donate_argnums=(1,),
+        )
+        args = (params_shapes, specs["cache"], specs["tokens"])
+        return fn, args
+
+    raise ValueError(kind)
+
+
+def apply_overrides(cfg, overrides: dict | None):
+    """dataclasses.replace with string values coerced to the field types."""
+    if not overrides:
+        return cfg
+    import dataclasses
+
+    fields = {f.name: f.type for f in dataclasses.fields(cfg)}
+    coerced = {}
+    for k, v in overrides.items():
+        if k not in fields:
+            raise KeyError(k)
+        cur = getattr(cfg, k)
+        coerced[k] = type(cur)(v) if not isinstance(v, type(cur)) else v
+    return dataclasses.replace(cfg, **coerced)
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, *, force: bool = False,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    out_path = OUT_DIR / f"{arch}__{shape}__{mesh_name}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = apply_overrides(get_config(arch), overrides)
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        fn, args = build_step(cfg, shape, mesh)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "n_devices": int(mesh.size),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "collectives": coll,
+        "model_params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "seconds": {"lower": round(t_lower, 2), "compile": round(t_compile, 2)},
+    }
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (repeatable); use with --tag")
+    ap.add_argument("--tag", default="", help="suffix for the output JSON")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.set)
+
+    cells = []
+    if args.all:
+        for arch in list_archs(include_extras=True):
+            for shape in runnable_cells(arch):
+                cells.append((arch, shape))
+    else:
+        cells.append((args.arch, args.shape))
+
+    for arch, shape in cells:
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shape, args.mesh, force=args.force,
+                           overrides=overrides, tag=args.tag)
+            status = "ok"
+            extra = (
+                f"flops={rec['flops']:.3e} coll={rec['collectives']['total']:.3e}B "
+                f"temp={rec['memory']['temp_bytes']/2**30:.2f}GiB"
+            )
+        except Exception as e:  # noqa: BLE001 — report and continue the sweep
+            status, extra = "FAIL", f"{type(e).__name__}: {e}"
+        print(f"[{time.time()-t0:7.1f}s] {arch:24s} {shape:12s} {args.mesh:8s} {status} {extra}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

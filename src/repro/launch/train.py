@@ -1,0 +1,128 @@
+"""Training launcher: mesh + sharded state + fault-tolerant driver.
+
+Runs a real (small-scale) training job on the local devices — the same code
+path the production mesh uses, minus device count.  Example:
+
+  PYTHONPATH=src python -m repro.launch.train --arch reservoir_lm \
+      --steps 200 --batch 8 --seq 256 --d-model 256 --layers 4
+
+The full-size archs launch identically with ``--no-reduce`` on a real
+cluster (the reduced flags exist so the CPU container can train a ~100M
+model end-to-end; examples/train_reservoir_lm.py drives this module).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.optim import AdamWConfig
+from repro.parallel.sharding import batch_pspec, named, param_pspecs
+from repro.runtime.steps import init_train_state, train_step
+from repro.runtime.trainer import TrainLoopConfig, run_training
+
+
+def reduced_config(cfg, args):
+    if args.no_reduce:
+        return cfg
+    return dataclasses.replace(
+        cfg,
+        n_layers=args.layers * len(cfg.unit),
+        d_model=args.d_model,
+        n_heads=max(4, args.d_model // 64),
+        n_kv_heads=max(2, args.d_model // 128),
+        head_dim=64,
+        d_ff=args.d_model * 4 if cfg.d_ff else 0,
+        vocab_size=args.vocab,
+        max_seq_len=args.seq,
+        n_experts=min(8, cfg.n_experts) if cfg.n_experts else 0,
+        top_k=min(2, cfg.top_k) if cfg.top_k else 0,
+        moe_d_ff=args.d_model if cfg.n_experts else 0,
+        n_encoder_layers=min(2, cfg.n_encoder_layers),
+        n_context_tokens=0,
+        reservoir_nodes=min(128, cfg.reservoir_nodes),
+        microbatches=args.microbatches,
+        dtype="float32",
+        remat="none",
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="reservoir_lm")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--checkpoint-dir", default="checkpoints/train")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-reduce", action="store_true",
+                    help="use the full assigned config (cluster scale)")
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO, format="%(asctime)s %(name)s %(message)s")
+
+    cfg = reduced_config(get_config(args.arch), args)
+    mesh = make_production_mesh() if args.production_mesh else make_debug_mesh()
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(50, args.steps // 5),
+                          total_steps=args.steps)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch, seed=args.seed)
+
+    with jax.set_mesh(mesh):
+        pspecs = param_pspecs(cfg, mesh)
+        state_specs = {"params": pspecs, "opt": {"m": pspecs, "v": pspecs},
+                       "step": jax.sharding.PartitionSpec()}
+        batch_specs = {
+            "tokens": batch_pspec(mesh),
+            "labels": batch_pspec(mesh),
+        }
+        step_fn = jax.jit(
+            lambda s, b: train_step(cfg, opt_cfg, s, b),
+            in_shardings=(state_specs, batch_specs),
+            out_shardings=(state_specs, None),
+            donate_argnums=(0,),
+        )
+
+        def init_fn():
+            return jax.jit(
+                lambda k: init_train_state(cfg, k), out_shardings=state_specs
+            )(jax.random.PRNGKey(args.seed))
+
+        state_sharding = jax.tree.map(lambda s: named(mesh, s), state_specs)
+
+        state, history, watchdog = run_training(
+            step_fn=step_fn,
+            init_state_fn=init_fn,
+            data_cfg=data_cfg,
+            loop_cfg=TrainLoopConfig(
+                total_steps=args.steps,
+                checkpoint_every=args.checkpoint_every,
+                checkpoint_dir=args.checkpoint_dir,
+            ),
+            state_sharding=state_sharding,
+        )
+
+    first = [h["loss"] for h in history[:5]]
+    last = [h["loss"] for h in history[-5:]]
+    print(f"arch={cfg.name} steps={len(history)} "
+          f"loss {sum(first)/len(first):.4f} -> {sum(last)/len(last):.4f} "
+          f"stragglers={len(watchdog.flagged)}")
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Model zoo: composable transformer/SSM/MoE stacks for the assigned archs."""
+
+from .config import BlockSpec, ModelConfig
+from .losses import lm_loss
+from .model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    param_logical_axes,
+    prefill,
+)
+
+__all__ = [
+    "BlockSpec",
+    "ModelConfig",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "lm_loss",
+    "param_logical_axes",
+    "prefill",
+]

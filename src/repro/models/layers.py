@@ -1,0 +1,308 @@
+"""Core transformer layers: norms, RoPE, GQA attention, gated MLPs, embeddings.
+
+Everything is pure-functional: ``*_defs(cfg)`` tables declare parameter
+shapes together with their *logical sharding axes* (consumed by
+``repro.parallel.sharding``), ``init_*`` build arrays from the defs, and
+``apply_*`` run the computation.  Params are stored in float32 (master
+weights; the optimizer works on them directly) and cast to ``cfg.dtype``
+at use.
+
+Logical axes vocabulary (mapped to mesh axes by parallel/sharding.py):
+  "vocab"   embedding rows            -> model axis
+  "embed"   d_model                   -> data axis under FSDP
+  "heads"   query heads               -> model axis (TP)
+  "kv"      kv heads                  -> model axis if divisible else replicated
+  "hd"      head_dim                  -> never sharded
+  "mlp"     d_ff / expanded inner dim -> model axis (TP)
+  "expert"  MoE expert axis           -> model axis (EP)
+  "ctx"     cross-attention context   -> like embed
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Param-def helpers
+# --------------------------------------------------------------------------
+
+
+def init_from_defs(defs: dict, key) -> dict:
+    """Build a params dict from a defs table {name: (shape, axes, init)}.
+
+    ``init`` is one of "fan_in" (truncated-normal, 1/sqrt(fan_in) with fan_in
+    = first axis), "zeros", "ones", or a callable(key, shape)->array.
+    """
+    params = {}
+    keys = jax.random.split(key, max(2, len(defs)))
+    for (name, (shape, _axes, init)), k in zip(sorted(defs.items()), keys):
+        if init == "fan_in":
+            scale = 1.0 / math.sqrt(max(1, shape[0]))
+            params[name] = scale * jax.random.truncated_normal(
+                k, -2.0, 2.0, shape, jnp.float32
+            )
+        elif init == "zeros":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif init == "ones":
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif callable(init):
+            params[name] = init(k, shape)
+        else:
+            raise ValueError(f"unknown init {init!r} for {name}")
+    return params
+
+
+def axes_from_defs(defs: dict) -> dict:
+    return {name: axes for name, (_s, axes, _i) in defs.items()}
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps):
+    # f32 *accumulation* for the variance without materialising x in f32: if
+    # any [B,S,d]-sized f32 view of the layer input reaches the backward,
+    # XLA hoists the bf16->f32 convert of the remat-saved residual stack out
+    # of the backward scan, costing +4.5 GiB/device at granite-8b train_4k
+    # (EXPERIMENTS.md §Perf).  jnp.mean with dtype=f32 accumulates the bf16
+    # squares in f32 (reduction precision kept; elementwise ops stay bf16).
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    rs = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * rs * (1.0 + scale).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float, positions):
+    """positions [...,] -> (cos, sin) [..., head_dim/2], f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, D]; cos/sin [..., S, D/2] broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c, s = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (self, GQA, optional qk-norm / softcap; cross variant)
+# --------------------------------------------------------------------------
+
+
+def attn_defs(cfg) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    defs = {
+        "wq": ((d, cfg.n_heads, hd), ("embed", "heads", "hd"), "fan_in"),
+        "wk": ((d, cfg.n_kv_heads, hd), ("embed", "kv", "hd"), "fan_in"),
+        "wv": ((d, cfg.n_kv_heads, hd), ("embed", "kv", "hd"), "fan_in"),
+        "wo": ((cfg.n_heads, hd, d), ("heads", "hd", "embed"), "fan_in"),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ((hd,), ("hd",), "zeros")
+        defs["k_norm"] = ((hd,), ("hd",), "zeros")
+    return defs
+
+
+def cross_attn_defs(cfg) -> dict:
+    d, hd, dc = cfg.d_model, cfg.head_dim, (cfg.d_context or cfg.d_model)
+    return {
+        "wq": ((d, cfg.n_heads, hd), ("embed", "heads", "hd"), "fan_in"),
+        "wk": ((dc, cfg.n_kv_heads, hd), ("ctx", "kv", "hd"), "fan_in"),
+        "wv": ((dc, cfg.n_kv_heads, hd), ("ctx", "kv", "hd"), "fan_in"),
+        "wo": ((cfg.n_heads, hd, d), ("heads", "hd", "embed"), "fan_in"),
+        "gate": ((1,), (None,), "zeros"),  # tanh-gated residual (llama-3.2 style)
+    }
+
+
+_CHUNK_THRESHOLD = 8192
+_KV_CHUNK = 2048
+
+
+def _sdpa(cfg, q, k, v, *, causal: bool, q_offset=0):
+    """q [B,Sq,H,D], k/v [B,Skv,KV,D] -> [B,Sq,H,D].  Softmax in f32.
+
+    GQA: H query heads grouped over KV heads.  ``q_offset`` is the absolute
+    position of q[0] for causal masking against a longer kv (decode).
+
+    Long sequences (Skv > 8k with Sq > 1, i.e. 32k+ prefill) switch to the
+    online-softmax KV-chunked path: the dense path would materialise a
+    [B,H,Sq,Skv] f32 logits tensor (34 GiB/device at prefill_32k —
+    EXPERIMENTS.md §Perf); chunking caps it at [B,H,Sq,chunk].
+    """
+    sq, skv = q.shape[1], k.shape[1]
+    if sq > 1 and skv > _CHUNK_THRESHOLD and skv % _KV_CHUNK == 0:
+        return _sdpa_chunked(cfg, q, k, v, causal=causal, q_offset=q_offset)
+    return _sdpa_dense(cfg, q, k, v, causal=causal, q_offset=q_offset)
+
+
+def _chunk_logits(cfg, qg, ks, dh):
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, ks, preferred_element_type=jnp.float32)
+    logits *= 1.0 / math.sqrt(dh)
+    if cfg.attn_logit_softcap:
+        cap = cfg.attn_logit_softcap
+        logits = cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def _sdpa_dense(cfg, q, k, v, *, causal: bool, q_offset=0):
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    qg = q.reshape(b, sq, kvh, h // kvh, dh)
+    logits = _chunk_logits(cfg, qg, k, dh)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(skv)
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def _sdpa_chunked(cfg, q, k, v, *, causal: bool, q_offset=0, chunk: int = _KV_CHUNK):
+    """Flash-style online softmax over KV chunks (exact, pure jnp)."""
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, sq, kvh, group, dh)
+    qpos = jnp.arange(sq) + q_offset
+
+    acc0 = jnp.zeros((b, kvh, group, sq, dh), jnp.float32)
+    mx0 = jnp.full((b, kvh, group, sq), -jnp.inf, jnp.float32)
+    den0 = jnp.zeros((b, kvh, group, sq), jnp.float32)
+
+    def body(carry, idx):
+        acc, mx, den = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, idx * chunk, chunk, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, 1)
+        logits = _chunk_logits(cfg, qg, ks, dh)                # [b,kv,g,sq,chunk]
+        if causal:
+            kpos = idx * chunk + jnp.arange(chunk)
+            mask = (qpos[:, None] >= kpos[None, :])[None, None, None]
+        else:
+            mask = jnp.ones((1, 1, 1, sq, chunk), bool)
+        chunk_mx = jnp.max(jnp.where(mask, logits, -jnp.inf), axis=-1)
+        new_mx = jnp.maximum(mx, chunk_mx)
+        safe_mx = jnp.where(jnp.isneginf(new_mx), 0.0, new_mx)  # fully-masked rows
+        p = jnp.where(mask, jnp.exp(logits - safe_mx[..., None]), 0.0)
+        corr = jnp.where(jnp.isneginf(mx), 0.0, jnp.exp(mx - safe_mx))
+        den = den * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(v.dtype), vs)
+        acc = acc * corr[..., None] + pv.astype(jnp.float32)
+        return (acc, new_mx, den), None
+
+    (acc, _, den), _ = jax.lax.scan(body, (acc0, mx0, den0), jnp.arange(skv // chunk))
+    out = acc / jnp.maximum(den, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1)                              # [b,sq,kv,g,dh]
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def apply_attn(cfg, p, x, *, positions, cache=None, causal=True):
+    """Self-attention.  With ``cache=(k_buf, v_buf, index)`` runs one decode
+    step: writes k,v at ``index`` and attends over the whole buffer.
+    Returns (out, new_cache).
+    """
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_freqs(cfg.head_dim, cfg.rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        k_buf, v_buf, idx = cache
+        k_buf = jax.lax.dynamic_update_slice(k_buf, k.astype(k_buf.dtype), (0, idx, 0, 0))
+        v_buf = jax.lax.dynamic_update_slice(v_buf, v.astype(v_buf.dtype), (0, idx, 0, 0))
+        new_cache = (k_buf, v_buf, idx + x.shape[1])
+        out = _sdpa(cfg, q, k_buf.astype(dt), v_buf.astype(dt), causal=causal, q_offset=idx)
+    else:
+        out = _sdpa(cfg, q, k, v, causal=causal)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return y, new_cache
+
+
+def apply_cross_attn(cfg, p, x, *, context_kv):
+    """Cross-attention to a precomputed (k, v) of the context (image patches /
+    encoder frames).  Tanh-gated residual contribution."""
+    dt = x.dtype
+    k, v = context_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    out = _sdpa(cfg, q, k.astype(dt), v.astype(dt), causal=False)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return jnp.tanh(p["gate"].astype(jnp.float32)).astype(dt) * y
+
+
+def context_kv(cfg, p, context):
+    """Precompute cross-attention k, v from context embeddings [B, T, d_ctx]."""
+    dt = context.dtype
+    k = jnp.einsum("btd,dhk->bthk", context, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", context, p["wv"].astype(dt))
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# --------------------------------------------------------------------------
+
+
+def mlp_defs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wi_gate": ((d, f), ("embed", "mlp"), "fan_in"),
+        "wi_up": ((d, f), ("embed", "mlp"), "fan_in"),
+        "wo": ((f, d), ("mlp", "embed"), "fan_in"),
+    }
+
+
+def apply_mlp(cfg, p, x):
+    dt = x.dtype
+    act = jax.nn.silu if cfg.mlp_act == "silu" else jax.nn.gelu
+    g = act(x @ p["wi_gate"].astype(dt))
+    u = x @ p["wi_up"].astype(dt)
+    return (g * u) @ p["wo"].astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Embedding / logits
+# --------------------------------------------------------------------------
+
+
+def embed_defs(cfg) -> dict:
+    # The table shards over the vocab ("model" axis) only: sharding d_model as
+    # well makes the token gather unpartitionable (SPMD falls back to full
+    # rematerialisation — gigabytes of transient per device; EXPERIMENTS §Perf).
+    defs = {"embedding": ((cfg.vocab_size, cfg.d_model), ("vocab", None), "fan_in")}
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ((cfg.d_model, cfg.vocab_size), (None, "vocab"), "fan_in")
+    return defs
+
+
+def embed_tokens(cfg, p, tokens):
+    x = jnp.take(p["embedding"], tokens, axis=0).astype(cfg.dtype)
+    return x * math.sqrt(cfg.d_model)
+
+
+def logits_from_hidden(cfg, p, x):
+    dt = x.dtype
+    table = p["lm_head"].astype(dt) if "lm_head" in p else p["embedding"].astype(dt).T
+    return (x @ table).astype(cfg.logit_dtype)
+
+
+def norm_defs(cfg, name: str = "scale") -> dict:
+    return {name: ((cfg.d_model,), ("embed",), "zeros")}

@@ -1,0 +1,31 @@
+"""Training losses: causal-LM cross entropy with z-loss and MoE aux."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(cfg, logits, labels, *, mask=None, z_loss: float = 1e-4, moe_aux=0.0):
+    """Next-token CE.  logits [B, S, V] (f32), labels [B, S] (already shifted
+    by the data pipeline).  Returns (loss, metrics dict)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(ce)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce_mean = jnp.sum(ce * mask) / denom
+    zl = z_loss * jnp.sum((logz * mask) ** 2) / denom
+    aux = cfg.router_aux_weight * moe_aux if cfg.n_experts else 0.0
+    loss = ce_mean + zl + aux
+    metrics = {
+        "loss": loss,
+        "ce": ce_mean,
+        "z_loss": zl,
+        "moe_aux": jnp.asarray(moe_aux, jnp.float32),
+        "tokens": denom,
+    }
+    return loss, metrics

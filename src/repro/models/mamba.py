@@ -1,0 +1,123 @@
+"""Mamba (S6 selective-state-space) sequence mixer — Jamba's non-attention
+layers [Lieber et al., arXiv:2403.19887; Gu & Dao, arXiv:2312.00752].
+
+Train path: the selective scan h_t = Ā_t·h_{t-1} + B̄_t·x_t is evaluated
+with ``jax.lax.associative_scan`` over the sequence axis (elementwise affine
+maps compose associatively) — O(log S) depth, TPU-native, no custom kernel
+needed since the op is bandwidth-bound elementwise work XLA fuses well.
+
+Decode path: O(1) per token with carried (conv window, h) state.
+
+The expanded inner dim (d_in = expand·d_model) carries the "mlp" logical
+axis, so TP shards the scan across devices with no cross-device coupling
+(state is diagonal over d_in).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _dt_rank(cfg) -> int:
+    return max(16, cfg.d_model // 16)
+
+
+def mamba_defs(cfg) -> dict:
+    d = cfg.d_model
+    d_in = d * cfg.mamba_expand
+    n = cfg.mamba_d_state
+    r = _dt_rank(cfg)
+
+    def a_log_init(_k, shape):
+        # S4D-real initialisation: A = -(1..n) per channel.
+        return jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), shape))
+
+    return {
+        "in_proj": ((d, 2 * d_in), ("embed", "mlp"), "fan_in"),
+        "conv_w": ((cfg.mamba_d_conv, d_in), (None, "mlp"), "fan_in"),
+        "conv_b": ((d_in,), ("mlp",), "zeros"),
+        "x_proj": ((d_in, r + 2 * n), ("mlp", None), "fan_in"),
+        "dt_proj": ((r, d_in), (None, "mlp"), "fan_in"),
+        "dt_bias": ((d_in,), ("mlp",), lambda _k, s: jnp.full(s, math.log(math.e - 1) - 2.0)),
+        "a_log": ((d_in, n), ("mlp", None), a_log_init),
+        "d_skip": ((d_in,), ("mlp",), "ones"),
+        "out_proj": ((d_in, d), ("mlp", "embed"), "fan_in"),
+    }
+
+
+def _ssm_inputs(cfg, p, xc):
+    """Shared by train/decode: per-step discretised (dA, dBx, C, D·x).
+
+    xc [B, S, d_in] (post-conv, post-silu) -> dA [B,S,d_in,N], dBx same, c [B,S,N].
+    """
+    n = cfg.mamba_d_state
+    r = _dt_rank(cfg)
+    proj = xc @ p["x_proj"].astype(xc.dtype)                  # [B,S,r+2N]
+    dt_in, b_ssm, c_ssm = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_in @ p["dt_proj"].astype(xc.dtype)).astype(jnp.float32)
+        + p["dt_bias"]
+    )                                                         # [B,S,d_in] f32
+    a = -jnp.exp(p["a_log"])                                  # [d_in, N] f32
+    da = jnp.exp(dt[..., None] * a)                           # [B,S,d_in,N]
+    # dt·x [B,S,d_in] outer-product B̄ [B,S,N] -> [B,S,d_in,N]
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * b_ssm.astype(jnp.float32)[..., None, :]
+    return da, dbx, c_ssm.astype(jnp.float32)
+
+
+def apply_mamba(cfg, p, x, *, cache=None):
+    """x [B, S, d]; cache=(conv_state [B, d_conv-1, d_in], h [B, d_in, N]).
+
+    Returns (y [B, S, d], new_cache).  cache=None -> train path (full scan,
+    no state returned).
+    """
+    dt_ = x.dtype
+    d_in = cfg.d_model * cfg.mamba_expand
+    xz = x @ p["in_proj"].astype(dt_)
+    xr, z = jnp.split(xz, 2, axis=-1)                         # [B,S,d_in] each
+
+    # -- causal depthwise conv --------------------------------------------------
+    kw = cfg.mamba_d_conv
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], kw - 1, d_in), dt_)
+        xp = jnp.concatenate([pad, xr], axis=1)
+    else:
+        conv_state, h0 = cache
+        xp = jnp.concatenate([conv_state.astype(dt_), xr], axis=1)
+    windows = [xp[:, i : i + xr.shape[1], :] for i in range(kw)]
+    xc = sum(w * p["conv_w"][i].astype(dt_) for i, w in enumerate(windows))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(dt_))
+
+    da, dbx, c_ssm = _ssm_inputs(cfg, p, xc)
+
+    # associative scan over S: (a2, b2) ∘ (a1, b1) = (a2·a1, a2·b1 + b2).
+    # The first component accumulates ∏da, which folds in the initial state
+    # h0 exactly — the same path serves train (h0 = 0), prefill, and S = 1
+    # decode.
+    def compose(p1, p2):
+        a1, b1 = p1
+        a2, b2 = p2
+        return a2 * a1, a2 * b1 + b2
+
+    cum_a, hs = jax.lax.associative_scan(compose, (da, dbx), axis=1)
+    if cache is None:
+        new_cache = None
+    else:
+        hs = hs + cum_a * h0[:, None]
+        new_cache = (xp[:, -(kw - 1):, :].astype(cache[0].dtype), hs[:, -1])
+
+    y = jnp.einsum("bsdn,bsn->bsd", hs, c_ssm).astype(dt_)
+    y = y + xc * p["d_skip"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt_), new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32):
+    d_in = cfg.d_model * cfg.mamba_expand
+    return (
+        jnp.zeros((batch, cfg.mamba_d_conv - 1, d_in), dtype),
+        jnp.zeros((batch, d_in, cfg.mamba_d_state), jnp.float32),
+    )

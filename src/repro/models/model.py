@@ -1,0 +1,358 @@
+"""Model assembly: heterogeneous block units scanned over repeats.
+
+The stack is ``cfg.unit`` (a short pattern of BlockSpecs) repeated
+``cfg.n_units`` times.  Parameters for each unit position are stacked over
+repeats and the forward pass is a ``lax.scan`` over units, so the compiled
+HLO is O(|unit|) regardless of depth (94-layer MoE compiles as fast as a
+12-layer dense model).  Heterogeneous patterns (Jamba's mamba/attn
+interleave, xLSTM's 7:1, VLM cross-attn insertion, enc-dec) are expressed
+purely in the unit pattern.
+
+Three entry points:
+  ``forward``      tokens -> logits (+ MoE aux loss)      [train / eval]
+  ``prefill``      tokens -> logits, filled cache         [serving]
+  ``decode_step``  one token + cache -> logits, cache     [serving]
+
+Caches are pytrees stacked over units, one entry per unit position, so the
+decode scan zips (params, cache) leaves.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layer as reservoir_layer
+
+from . import layers, mamba, moe, xlstm
+from .config import ModelConfig
+
+# --------------------------------------------------------------------------
+# Param defs per block
+# --------------------------------------------------------------------------
+
+
+def _mixer_defs(cfg, kind: str) -> dict:
+    if kind == "attn":
+        return layers.attn_defs(cfg)
+    if kind == "cross_attn":
+        return layers.cross_attn_defs(cfg)
+    if kind == "mamba":
+        return mamba.mamba_defs(cfg)
+    if kind == "mlstm":
+        return xlstm.mlstm_defs(cfg)
+    if kind == "slstm":
+        return xlstm.slstm_defs(cfg)
+    if kind == "reservoir":
+        return reservoir_layer.reservoir_defs(cfg)
+    raise ValueError(kind)
+
+
+def _mlp_defs(cfg, kind: str) -> dict:
+    if kind == "none":
+        return {}
+    if kind == "dense":
+        return layers.mlp_defs(cfg)
+    if kind == "moe":
+        return moe.moe_defs(cfg)
+    raise ValueError(kind)
+
+
+def _block_defs(cfg, blk) -> dict:
+    defs = {"norm_mixer": ((cfg.d_model,), ("embed",), "zeros")}
+    defs.update({f"mixer/{k}": v for k, v in _mixer_defs(cfg, blk.mixer).items()})
+    if blk.mlp != "none":
+        defs["norm_mlp"] = ((cfg.d_model,), ("embed",), "zeros")
+        defs.update({f"mlp/{k}": v for k, v in _mlp_defs(cfg, blk.mlp).items()})
+    return defs
+
+
+def _split(params: dict, prefix: str) -> dict:
+    plen = len(prefix) + 1
+    return {k[plen:]: v for k, v in params.items() if k.startswith(prefix + "/")}
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    keys = jax.random.split(key, 4)
+    params: dict[str, Any] = {"embed": layers.init_from_defs(layers.embed_defs(cfg), keys[0])}
+
+    def stacked_unit(key, unit, n_repeats):
+        out = []
+        for pos, blk in enumerate(unit):
+            defs = _block_defs(cfg, blk)
+            kpos = jax.random.fold_in(key, pos)
+            init_one = lambda k, d=defs: layers.init_from_defs(d, k)
+            out.append(jax.vmap(init_one)(jax.random.split(kpos, n_repeats)))
+        return tuple(out)
+
+    params["units"] = stacked_unit(keys[1], cfg.unit, cfg.n_units)
+    params["final_norm"] = layers.init_from_defs(layers.norm_defs(cfg), keys[2])
+
+    if cfg.n_encoder_layers:
+        from .config import BlockSpec
+
+        enc_unit = (BlockSpec("attn", "dense"),)
+        params["encoder"] = {
+            "units": stacked_unit(keys[3], enc_unit, cfg.n_encoder_layers),
+            "final_norm": layers.init_from_defs(layers.norm_defs(cfg), jax.random.fold_in(keys[3], 7)),
+        }
+    return params
+
+
+def param_logical_axes(cfg: ModelConfig) -> dict:
+    """Same pytree structure as init_params, with logical-axis tuples as leaves.
+
+    Stacked unit leaves get a leading ``"layers"`` axis entry (never sharded).
+    """
+    axes: dict[str, Any] = {"embed": layers.axes_from_defs(layers.embed_defs(cfg))}
+
+    def unit_axes(unit):
+        out = []
+        for blk in unit:
+            defs = _block_defs(cfg, blk)
+            out.append({k: ("layers", *a) for k, a in layers.axes_from_defs(defs).items()})
+        return tuple(out)
+
+    axes["units"] = unit_axes(cfg.unit)
+    axes["final_norm"] = layers.axes_from_defs(layers.norm_defs(cfg))
+    if cfg.n_encoder_layers:
+        from .config import BlockSpec
+
+        axes["encoder"] = {
+            "units": unit_axes((BlockSpec("attn", "dense"),)),
+            "final_norm": layers.axes_from_defs(layers.norm_defs(cfg)),
+        }
+    return axes
+
+
+# --------------------------------------------------------------------------
+# Block application
+# --------------------------------------------------------------------------
+
+
+def _apply_block(cfg, blk, p, x, *, positions, context=None, cache=None):
+    """Pre-norm mixer + residual, pre-norm MLP + residual.
+
+    Returns (x, new_cache, aux).  ``cache`` is the mixer state for this block
+    (None in pure training).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.rmsnorm(x, p["norm_mixer"], cfg.norm_eps)
+    mp = _split(p, "mixer")
+    new_cache = None
+    if blk.mixer == "attn":
+        y, new_cache = layers.apply_attn(cfg, mp, h, positions=positions, cache=cache, causal=cfg.causal)
+    elif blk.mixer == "cross_attn":
+        if cache is not None:
+            ctx_kv = cache  # precomputed at prefill
+            new_cache = cache
+        else:
+            ctx_kv = layers.context_kv(cfg, mp, context)
+        y = layers.apply_cross_attn(cfg, mp, h, context_kv=ctx_kv)
+    elif blk.mixer == "mamba":
+        y, new_cache = mamba.apply_mamba(cfg, mp, h, cache=cache)
+    elif blk.mixer == "mlstm":
+        y, new_cache = xlstm.apply_mlstm(cfg, mp, h, cache=cache)
+    elif blk.mixer == "slstm":
+        y, new_cache = xlstm.apply_slstm(cfg, mp, h, cache=cache)
+    elif blk.mixer == "reservoir":
+        y, new_cache = reservoir_layer.apply_reservoir(cfg, mp, h, cache=cache)
+    else:
+        raise ValueError(blk.mixer)
+    x = x + y
+
+    if blk.mlp != "none":
+        h = layers.rmsnorm(x, p["norm_mlp"], cfg.norm_eps)
+        if blk.mlp == "dense":
+            y = layers.apply_mlp(cfg, _split(p, "mlp"), h)
+        else:
+            y, aux = moe.apply_moe(cfg, _split(p, "mlp"), h)
+        x = x + y
+    return x, new_cache, aux
+
+
+def _shard_activations(x, cfg=None):
+    """Anchor [B, S, d] activations: batch over the strategy's data axes."""
+    from repro.parallel.sharding import maybe_shard
+
+    axes = ("pod", "data", "model") if cfg is not None and cfg.strategy == "zero3" \
+        else ("pod", "data")
+    return maybe_shard(x, axes)
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# --------------------------------------------------------------------------
+# Forward (train / eval)
+# --------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params: dict, tokens, *, context=None):
+    """tokens [B, S] -> (logits [B, S, V], moe_aux scalar).
+
+    ``context`` [B, T, d]: image-patch / audio-frame stub embeddings for
+    cross-attention families (encoded first if the config has an encoder).
+    """
+    x = layers.embed_tokens(cfg, params["embed"], tokens)
+    x = _shard_activations(x, cfg)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    if cfg.n_encoder_layers:
+        context = encode(cfg, params, context)
+
+    def unit_step(carry, unit_params):
+        x, aux = carry
+        for pos, blk in enumerate(cfg.unit):
+            x, _, a = _apply_block(cfg, blk, unit_params[pos], x, positions=positions, context=context)
+            aux = aux + a
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(
+        _remat(cfg, unit_step), (x, jnp.zeros((), jnp.float32)), params["units"],
+        unroll=cfg.analysis_unroll,
+    )
+    x = layers.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return layers.logits_from_hidden(cfg, params["embed"], x), aux
+
+
+def encode(cfg: ModelConfig, params: dict, frames):
+    """Bidirectional encoder over stub frame embeddings [B, T, d]."""
+    from .config import BlockSpec
+
+    enc_cfg = _encoder_view(cfg)
+    x = frames.astype(cfg.dtype)
+    positions = jnp.arange(frames.shape[1])[None, :]
+    blk = BlockSpec("attn", "dense")
+
+    def unit_step(x, unit_params):
+        x, _, _ = _apply_block(enc_cfg, blk, unit_params[0], x, positions=positions)
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(cfg, unit_step), x, params["encoder"]["units"],
+                        unroll=cfg.analysis_unroll)
+    return layers.rmsnorm(x, params["encoder"]["final_norm"]["scale"], cfg.norm_eps)
+
+
+@functools.lru_cache(maxsize=32)
+def _encoder_view_cached(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(cfg, causal=False, unit=())
+
+
+def _encoder_view(cfg):
+    return _encoder_view_cached(cfg)
+
+
+# --------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *, context_len: int = 0):
+    """Stacked per-unit-position cache pytree (zeros; ``pos`` tracks fill)."""
+    u = cfg.n_units
+    cache_units = []
+    kv_dt = jnp.dtype(cfg.dtype)
+    for blk in cfg.unit:
+        if blk.mixer == "attn":
+            shape = (u, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+            cache_units.append((jnp.zeros(shape, kv_dt), jnp.zeros(shape, kv_dt)))
+        elif blk.mixer == "cross_attn":
+            shape = (u, batch, context_len, cfg.n_kv_heads, cfg.head_dim)
+            cache_units.append((jnp.zeros(shape, kv_dt), jnp.zeros(shape, kv_dt)))
+        elif blk.mixer == "mamba":
+            c = mamba.init_mamba_cache(cfg, batch)
+            cache_units.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (u, *a.shape)), c))
+        elif blk.mixer == "mlstm":
+            c = xlstm.init_mlstm_cache(cfg, batch)
+            cache_units.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (u, *a.shape)), c))
+        elif blk.mixer == "slstm":
+            c = xlstm.init_slstm_cache(cfg, batch)
+            cache_units.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (u, *a.shape)), c))
+        elif blk.mixer == "reservoir":
+            n, r = cfg.reservoir_nodes, reservoir_layer._n_channels(cfg)
+            cache_units.append(
+                (
+                    jnp.zeros((u, batch, r, n), jnp.float32),
+                    jnp.zeros((u, batch, r), jnp.float32),
+                )
+            )
+        else:
+            raise ValueError(blk.mixer)
+    return {"pos": jnp.zeros((), jnp.int32), "units": tuple(cache_units)}
+
+
+def _mixer_cache(blk, unit_cache, pos):
+    if blk.mixer == "attn":
+        k_buf, v_buf = unit_cache
+        return (k_buf, v_buf, pos)
+    return unit_cache
+
+
+def _store_cache(blk, new_cache):
+    if blk.mixer == "attn":
+        k_buf, v_buf, _idx = new_cache
+        return (k_buf, v_buf)
+    return new_cache
+
+
+def _forward_cached(cfg, params, cache, tokens, *, context=None):
+    """Shared prefill/decode body: runs [B, S] tokens through cached blocks."""
+    x = layers.embed_tokens(cfg, params["embed"], tokens)
+    x = _shard_activations(x, cfg)
+    pos0 = cache["pos"]
+    positions = pos0 + jnp.arange(tokens.shape[1])[None, :]
+    if cfg.n_encoder_layers and context is not None:
+        context = encode(cfg, params, context)
+
+    def unit_step(carry, xs):
+        x = carry
+        unit_params, unit_cache = xs
+        new_unit_cache = []
+        for pos, blk in enumerate(cfg.unit):
+            blk_cache = _mixer_cache(blk, unit_cache[pos], pos0)
+            if blk.mixer == "cross_attn" and context is not None:
+                # Prefill: compute the context kv once and store it.
+                mp = _split(unit_params[pos], "mixer")
+                blk_cache = layers.context_kv(cfg, mp, context)
+            x, nc, _ = _apply_block(cfg, blk, unit_params[pos], x, positions=positions, cache=blk_cache)
+            new_unit_cache.append(_store_cache(blk, nc))
+        return x, tuple(new_unit_cache)
+
+    x, new_units = jax.lax.scan(unit_step, x, (params["units"], cache["units"]),
+                                unroll=cfg.analysis_unroll)
+    x = layers.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = layers.logits_from_hidden(cfg, params["embed"], x)
+    new_cache = {"pos": pos0 + tokens.shape[1], "units": new_units}
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens, *, max_len: int, context=None):
+    cache = init_cache(
+        cfg,
+        tokens.shape[0],
+        max_len,
+        context_len=(context.shape[1] if context is not None else 0),
+    )
+    return _forward_cached(cfg, params, cache, tokens, context=context)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache, tokens):
+    """One decode step: tokens [B, 1] + cache -> (logits [B, 1, V], cache)."""
+    return _forward_cached(cfg, params, cache, tokens)

@@ -1,0 +1,13 @@
+"""Optimisation: AdamW (+schedules, clipping) and gradient compression."""
+
+from .adamw import AdamWConfig, apply_updates, global_norm, init_opt_state, schedule_lr
+from . import compression
+
+__all__ = [
+    "AdamWConfig",
+    "apply_updates",
+    "compression",
+    "global_norm",
+    "init_opt_state",
+    "schedule_lr",
+]

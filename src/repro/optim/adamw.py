@@ -1,0 +1,99 @@
+"""AdamW with global-norm clipping and schedules — self-contained (no optax
+dependency), pytree-generic, f32 moments regardless of param dtype.
+
+The optimizer state mirrors the parameter pytree, so parameter sharding
+specs apply verbatim to both moments (ZeRO: moments live wherever their
+shard lives).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    schedule: str = "cosine"  # "cosine" | "constant"
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def schedule_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0
+    )
+    cos = 0.5 * (1.0 + jnp.cos(math.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _decay_mask(path: str) -> bool:
+    """No weight decay on norms / biases / gates / 1-d params."""
+    needle = path.lower()
+    return not any(s in needle for s in ("norm", "bias", "gate", "scale", "a_log", "d_skip"))
+
+
+def apply_updates(cfg: AdamWConfig, params, opt_state, grads, step):
+    """One AdamW step.  Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        g32 = g.astype(jnp.float32) * scale
+        m = b1 * m + (1.0 - b1) * g32
+        v = b2 * v + (1.0 - b2) * g32 * g32
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        pathstr = jax.tree_util.keystr(path)
+        if cfg.weight_decay and _decay_mask(pathstr):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(m)
+        new_v.append(v)
+
+    unflatten = jax.tree_util.tree_unflatten
+    params = unflatten(treedef, new_p)
+    opt_state = {
+        "m": unflatten(jax.tree_util.tree_structure(opt_state["m"]), new_m),
+        "v": unflatten(jax.tree_util.tree_structure(opt_state["v"]), new_v),
+    }
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return params, opt_state, metrics

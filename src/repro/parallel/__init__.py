@@ -1,0 +1,5 @@
+"""Distribution: sharding rules, pipeline parallelism, mesh helpers."""
+
+from . import pipeline, sharding
+
+__all__ = ["pipeline", "sharding"]

@@ -1,0 +1,5 @@
+"""Runtime: step functions and the fault-tolerant training driver."""
+
+from . import steps, trainer
+
+__all__ = ["steps", "trainer"]

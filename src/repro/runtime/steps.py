@@ -1,0 +1,97 @@
+"""Pure step functions: microbatched training step and serving steps.
+
+``train_step`` is one optimizer step: grad accumulation over
+``cfg.microbatches`` (a lax.scan, so activations of one microbatch are live
+at a time), global-norm clipping, AdamW, loss metrics.  The launchers wrap
+these with jit + in/out shardings (launch/dryrun.py, launch/train.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step as model_decode
+from repro.models import forward, lm_loss, prefill as model_prefill
+from repro.optim import AdamWConfig, apply_updates, init_opt_state
+from repro.parallel.sharding import maybe_shard
+
+
+def init_train_state(cfg, key) -> dict:
+    from repro.models import init_params
+
+    params = init_params(cfg, key)
+    return {
+        "params": params,
+        "opt": init_opt_state(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def loss_fn(cfg, params, batch):
+    logits, aux = forward(cfg, params, batch["tokens"], context=batch.get("context"))
+    return lm_loss(cfg, logits, batch["labels"], moe_aux=aux)
+
+
+def train_step(cfg, opt_cfg: AdamWConfig, state: dict, batch: dict):
+    """One optimizer step with grad accumulation.
+
+    batch: {"tokens" [B,S], "labels" [B,S], "context"? [B,T,d]} with B =
+    cfg.microbatches · per-step batch.
+    """
+    m = cfg.microbatches
+    params = state["params"]
+
+    def microbatch(i, batch):
+        # Anchor the per-microbatch batch dim on ("pod","data"): without the
+        # constraint GSPMD may shard the microbatch *index* dim of the
+        # reshape instead, replicating activations (22 GiB/device observed —
+        # EXPERIMENTS.md §Perf).
+        axes = ("pod", "data", "model") if cfg.strategy == "zero3" else ("pod", "data")
+
+        def slice_one(x):
+            mb = x.reshape(m, -1, *x.shape[1:])[i]
+            return maybe_shard(mb, axes)
+
+        return jax.tree.map(slice_one, batch)
+
+    grad_fn = jax.value_and_grad(lambda p, b: loss_fn(cfg, p, b), has_aux=True)
+
+    def accum(carry, i):
+        grads, metrics_sum = carry
+        (loss, metrics), g = grad_fn(params, microbatch(i, batch))
+        grads = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), grads, g)
+        metrics_sum = jax.tree.map(lambda a, b: a + b, metrics_sum, metrics)
+        return (grads, metrics_sum), None
+
+    zero_grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    zero_metrics = {
+        "loss": jnp.zeros((), jnp.float32),
+        "ce": jnp.zeros((), jnp.float32),
+        "z_loss": jnp.zeros((), jnp.float32),
+        "moe_aux": jnp.zeros((), jnp.float32),
+        "tokens": jnp.zeros((), jnp.float32),
+    }
+    (grads, metrics), _ = jax.lax.scan(accum, (zero_grads, zero_metrics), jnp.arange(m),
+                                       unroll=cfg.analysis_unroll)
+    grads = jax.tree.map(lambda g: g / m, grads)
+    metrics = jax.tree.map(lambda x: x / m, metrics)
+    metrics["tokens"] = metrics["tokens"] * m
+
+    params, opt, opt_metrics = apply_updates(opt_cfg, params, state["opt"], grads, state["step"])
+    metrics.update(opt_metrics)
+    new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+    return new_state, metrics
+
+
+def serve_prefill(cfg, params, tokens, context=None, *, max_len: int | None = None):
+    """Prefill: returns (last-position logits [B, V], cache)."""
+    max_len = max_len or tokens.shape[1]
+    logits, cache = model_prefill(cfg, params, tokens, max_len=max_len, context=context)
+    return logits[:, -1, :], cache
+
+
+def serve_decode(cfg, params, cache, tokens):
+    """One decode step: (logits [B, V], new cache)."""
+    logits, cache = model_decode(cfg, params, cache, tokens)
+    return logits[:, -1, :], cache

@@ -1,0 +1,91 @@
+"""Attention invariants: chunked == dense, GQA grouping, RoPE, causality."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import ModelConfig
+from repro.models.layers import (
+    _sdpa_chunked,
+    _sdpa_dense,
+    apply_rope,
+    rope_freqs,
+)
+
+CFG = ModelConfig(name="t", d_model=64, n_heads=4, n_kv_heads=2, vocab_size=64)
+
+
+def _qkv(key, b, sq, skv, h, kv, dh):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (b, sq, h, dh), jnp.float32),
+            jax.random.normal(ks[1], (b, skv, kv, dh), jnp.float32),
+            jax.random.normal(ks[2], (b, skv, kv, dh), jnp.float32))
+
+
+@given(seed=st.integers(0, 10), causal=st.booleans(),
+       chunk_div=st.sampled_from([2, 4, 8]))
+@settings(max_examples=12, deadline=None)
+def test_chunked_equals_dense(seed, causal, chunk_div):
+    q, k, v = _qkv(jax.random.PRNGKey(seed), 2, 32, 32, 4, 2, 16)
+    dense = _sdpa_dense(CFG, q, k, v, causal=causal)
+    chunked = _sdpa_chunked(CFG, q, k, v, causal=causal, chunk=32 // chunk_div)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense), atol=2e-6)
+
+
+def test_chunked_with_offset_decode_window():
+    q, k, v = _qkv(jax.random.PRNGKey(3), 1, 16, 64, 4, 2, 16)
+    dense = _sdpa_dense(CFG, q, k, v, causal=True, q_offset=48)
+    chunked = _sdpa_chunked(CFG, q, k, v, causal=True, q_offset=48, chunk=16)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense), atol=2e-6)
+
+
+def test_causality():
+    """Future kv must not influence earlier queries."""
+    q, k, v = _qkv(jax.random.PRNGKey(4), 1, 8, 8, 4, 2, 16)
+    base = _sdpa_dense(CFG, q, k, v, causal=True)
+    k2 = k.at[:, 5:].set(jax.random.normal(jax.random.PRNGKey(9), k[:, 5:].shape))
+    v2 = v.at[:, 5:].set(jax.random.normal(jax.random.PRNGKey(10), v[:, 5:].shape))
+    pert = _sdpa_dense(CFG, q, k2, v2, causal=True)
+    np.testing.assert_allclose(np.asarray(base[:, :5]), np.asarray(pert[:, :5]), atol=1e-6)
+
+
+def test_gqa_equals_repeated_kv():
+    """GQA == MHA with kv heads explicitly repeated per group."""
+    q, k, v = _qkv(jax.random.PRNGKey(5), 2, 8, 8, 4, 2, 16)
+    out = _sdpa_dense(CFG, q, k, v, causal=True)
+    krep = jnp.repeat(k, 2, axis=2)
+    vrep = jnp.repeat(v, 2, axis=2)
+    # with kv == h the grouping is trivial
+    out_rep = _sdpa_dense(CFG, q, krep, vrep, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_rep), atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    pos = jnp.arange(16)[None, :]
+    cos, sin = rope_freqs(32, 10_000.0, pos)
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 16, 2, 32), jnp.float32)
+    xr = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(xr), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(7), (1, 1, 1, 32), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(8), (1, 1, 1, 32), jnp.float32)
+    def dot_at(i, j):
+        ci, si = rope_freqs(32, 10_000.0, jnp.asarray([[i]]))
+        cj, sj = rope_freqs(32, 10_000.0, jnp.asarray([[j]]))
+        return float(jnp.sum(apply_rope(q, ci, si) * apply_rope(k, cj, sj)))
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-4
+
+
+def test_softcap_bounds_logits():
+    cfg = ModelConfig(name="t", d_model=64, n_heads=4, n_kv_heads=2,
+                      vocab_size=64, attn_logit_softcap=5.0)
+    q, k, v = _qkv(jax.random.PRNGKey(11), 1, 8, 8, 4, 2, 16)
+    big_q = q * 100
+    out = _sdpa_dense(cfg, big_q, k, v, causal=False)
+    assert np.isfinite(np.asarray(out)).all()

@@ -1,0 +1,61 @@
+"""Checkpoint store: atomicity, integrity fallback, keep-k, async."""
+
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+
+
+def _tree(x=0.0):
+    return {"a": jnp.asarray([1.0 + x, 2.0]), "b": {"c": jnp.arange(6).reshape(2, 3) + int(x)}}
+
+
+def test_roundtrip(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save(5, _tree(1.0))
+    step, restored = store.restore(_tree())
+    assert step == 5
+    np.testing.assert_allclose(np.asarray(restored["a"]), [2.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(restored["b"]["c"]), np.arange(6).reshape(2, 3) + 1)
+
+
+def test_integrity_fallback(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save(1, _tree(1.0))
+    store.save(2, _tree(2.0))
+    # corrupt the newest checkpoint's first leaf
+    leaf = next((tmp_path / "step_0000000002").glob("leaf_*.npy"))
+    leaf.write_bytes(b"garbage")
+    step, restored = store.restore(_tree())
+    assert step == 1
+    np.testing.assert_allclose(np.asarray(restored["a"]), [2.0, 2.0])
+
+
+def test_keep_k_gc(tmp_path):
+    store = CheckpointStore(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        store.save(s, _tree(float(s)))
+    assert store.all_steps() == [3, 4]
+
+
+def test_async_save(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save_async(7, _tree(7.0))
+    store.wait()
+    step, restored = store.restore(_tree())
+    assert step == 7
+
+
+def test_no_tmp_dir_left_behind(tmp_path):
+    store = CheckpointStore(tmp_path)
+    store.save(9, _tree())
+    assert not list(pathlib.Path(tmp_path).glob("*.tmp"))
+
+
+def test_restore_empty(tmp_path):
+    store = CheckpointStore(tmp_path)
+    step, restored = store.restore(_tree())
+    assert step is None and restored is None

@@ -1,0 +1,38 @@
+"""Dry-run HLO collective parser on synthetic HLO snippets."""
+
+from repro.launch.dryrun import collective_bytes, _shape_bytes
+
+
+HLO = """
+  %ar = f32[1024,256]{1,0} all-reduce(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %ag.1 = bf16[512,128]{1,0} all-gather(%y), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %rs = f32[64,64]{1,0} reduce-scatter(%z), replica_groups={{0,1}}, dimensions={0}
+  %cp = bf16[32,32]{1,0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+  %a2a = f32[16,16]{1,0} all-to-all(%v), replica_groups={{0,1,2,3}}, dimensions={0}
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[1024,256]") == 1024 * 256 * 4
+    assert _shape_bytes("bf16[512,128]") == 512 * 128 * 2
+    assert _shape_bytes("(f32[8,8], bf16[4])") == 8 * 8 * 4 + 4 * 2
+
+
+def test_collective_bytes_kinds_and_groups():
+    out = collective_bytes(HLO)
+    assert out["counts"] == {"all-reduce": 1, "all-gather": 1, "reduce-scatter": 1,
+                             "collective-permute": 1, "all-to-all": 1}
+    ar = 1024 * 256 * 4
+    assert abs(out["all-reduce"] - 2 * ar * 3 / 4) < 1
+    ag = 512 * 128 * 2
+    assert abs(out["all-gather"] - ag * 7 / 8) < 1
+    rs = 64 * 64 * 4
+    assert abs(out["reduce-scatter"] - rs * 1) < 1
+    assert out["collective-permute"] == 32 * 32 * 2
+    assert out["total"] > 0
+
+
+def test_ignores_non_collectives():
+    out = collective_bytes("%dot = f32[128,128]{1,0} dot(%a, %b)\n")
+    assert out["total"] == 0

@@ -1,0 +1,79 @@
+"""Pallas kernel validation: shape/dtype sweeps against pure-jnp oracles.
+
+Kernels run in interpret mode on CPU (TPU is the lowering target)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MZISine, MackeyGlass, SiliconMR, make_mask
+from repro.kernels.dfr_scan import dfr_scan, dfr_scan_ref
+from repro.kernels.ridge_gram import gram_accumulate, gram_ref
+
+MODELS = [SiliconMR(), SiliconMR(beta_tpa=0.7), MackeyGlass(), MZISine()]
+
+
+@pytest.mark.parametrize("model", MODELS, ids=lambda m: type(m).__name__ + str(getattr(m, "beta_tpa", "")))
+@pytest.mark.parametrize("b,k,n", [(1, 5, 7), (3, 11, 17), (5, 7, 64), (2, 3, 129)])
+def test_dfr_scan_matches_oracle(model, b, k, n):
+    rng = np.random.default_rng(b * 100 + k * 10 + n)
+    j = jnp.asarray(rng.uniform(0, 1, (b, k)), jnp.float32)
+    mask = make_mask(n, seed=2)
+    s0 = jnp.asarray(rng.uniform(0, 0.3, (b, n)), jnp.float32)
+    out = dfr_scan(model, j, mask, s0, block_s=1)
+    ref = dfr_scan_ref(model, j, mask, s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dfr_scan_dtypes(dtype):
+    """bf16 I/O compares against the *f32* oracle: the kernel carries the
+    recurrence in f32 internally (kernels/dfr_scan docstring), so it is more
+    accurate than a bf16-carried reference; tolerance covers the bf16
+    input/output quantisation only (plus rare branch flips near u == s)."""
+    model = SiliconMR()
+    rng = np.random.default_rng(0)
+    j32 = jnp.asarray(rng.uniform(0, 1, (2, 6)), jnp.float32)
+    mask = make_mask(9, seed=1)
+    out = dfr_scan(model, j32.astype(dtype), mask, jnp.zeros((2, 9), dtype), block_s=1)
+    ref = dfr_scan_ref(model, j32.astype(dtype).astype(jnp.float32), mask, jnp.zeros((2, 9)))
+    assert out.dtype == dtype
+    tol = 1e-6 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol
+    )
+
+
+def test_dfr_scan_multi_tile_batch():
+    """Batch larger than one (S, 128) tile exercises the grid's batch dim."""
+    model = SiliconMR()
+    rng = np.random.default_rng(1)
+    b = 2 * 128 + 17  # forces padding + 2+ tiles at block_s=1
+    j = jnp.asarray(rng.uniform(0, 1, (b, 4)), jnp.float32)
+    mask = make_mask(5, seed=1)
+    s0 = jnp.zeros((b, 5), jnp.float32)
+    out = dfr_scan(model, j, mask, s0, block_s=1)
+    ref = dfr_scan_ref(model, j, mask, s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+@pytest.mark.parametrize("t,f,c", [(100, 37, 1), (600, 128, 2), (257, 150, 1), (64, 129, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_matches_oracle(t, f, c, dtype):
+    rng = np.random.default_rng(t + f + c)
+    x = jnp.asarray(rng.standard_normal((t, f)), dtype)
+    y = jnp.asarray(rng.standard_normal((t, c)), dtype)
+    g, mom = gram_accumulate(x, y)
+    gr, mr = gram_ref(x, y)
+    scale_g = max(1e-9, float(jnp.max(jnp.abs(gr))))
+    scale_c = max(1e-9, float(jnp.max(jnp.abs(mr))))
+    assert float(jnp.max(jnp.abs(g - gr))) / scale_g < 1e-5
+    assert float(jnp.max(jnp.abs(mom - mr))) / scale_c < 1e-5
+
+
+def test_gram_1d_targets():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((50, 20)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((50,)), jnp.float32)
+    g, mom = gram_accumulate(x, y)
+    assert g.shape == (20, 20) and mom.shape == (20, 1)

@@ -1,0 +1,48 @@
+"""Masking / MLS properties (paper Section III.A, ref [25])."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.masking import make_mask, masked_input, mls_sequence
+
+
+@pytest.mark.parametrize("m", [3, 5, 8, 10])
+def test_mls_period_and_balance(m):
+    seq = mls_sequence(m)
+    assert seq.shape[0] == 2**m - 1
+    # MLS balance: exactly one more +1 run than -1 (sum == +1 or -1 depending
+    # on convention; Fibonacci LFSR emits 2^(m-1) ones).
+    assert abs(int(seq.sum())) == 1
+
+
+@pytest.mark.parametrize("m", [5, 8])
+def test_mls_autocorrelation(m):
+    """Ideal MLS property: cyclic autocorrelation is -1 off-peak."""
+    seq = mls_sequence(m).astype(np.int64)
+    n = seq.shape[0]
+    for lag in [1, 2, n // 2, n - 1]:
+        r = int(np.sum(seq * np.roll(seq, lag)))
+        assert r == -1, (lag, r)
+
+
+@given(n=st.integers(1, 300), seed=st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_make_mask_levels_and_determinism(n, seed):
+    mask = np.asarray(make_mask(n, seed=seed))
+    assert mask.shape == (n,)
+    assert set(np.unique(mask)) <= {0.0, 1.0}
+    again = np.asarray(make_mask(n, seed=seed))
+    np.testing.assert_array_equal(mask, again)
+
+
+def test_masked_input_shape_and_periodicity():
+    """m(t) holds the same per-node value in every tau period (paper III.A.1)."""
+    import jax.numpy as jnp
+
+    j = jnp.asarray(np.random.default_rng(0).uniform(size=(7,)), jnp.float32)
+    mask = make_mask(13, seed=2)
+    u = np.asarray(masked_input(j, mask))
+    assert u.shape == (7, 13)
+    for k in range(7):
+        np.testing.assert_allclose(u[k], float(j[k]) * np.asarray(mask), rtol=1e-6)

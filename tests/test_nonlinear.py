@@ -1,0 +1,86 @@
+"""NL-node model properties: scan equivalence, stability, fading memory."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    MZISine,
+    MackeyGlass,
+    SiliconMR,
+    SiliconMRLiteral,
+    generate_states,
+    make_mask,
+)
+
+MODELS = {
+    "mr": SiliconMR(),
+    "mr_tpa": SiliconMR(beta_tpa=0.5),
+    "mr_literal": SiliconMRLiteral(gamma=0.05),
+    "mg": MackeyGlass(),
+    "mzi": MZISine(),
+}
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+@given(b=st.integers(1, 3), k=st.integers(1, 12), n=st.integers(1, 40),
+       seed=st.integers(0, 10))
+@settings(max_examples=10, deadline=None)
+def test_fast_equals_sequential_oracle(name, b, k, n, seed):
+    """period_update (assoc-scan / batched) == node-by-node physical evolution."""
+    model = MODELS[name]
+    rng = np.random.default_rng(seed)
+    j = jnp.asarray(rng.uniform(0, 1, (b, k)), jnp.float32)
+    mask = make_mask(n, seed=seed)
+    ref = generate_states(model, j, mask, method="ref")
+    fast = generate_states(model, j, mask, method="fast")
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(ref), atol=5e-6)
+
+
+@given(seed=st.integers(0, 20), gamma=st.floats(0.1, 0.95))
+@settings(max_examples=15, deadline=None)
+def test_corrected_mr_bounded(seed, gamma):
+    """θ-corrected dynamics are bounded for any γ<1 (DESIGN.md §7)."""
+    model = SiliconMR(gamma=gamma)
+    rng = np.random.default_rng(seed)
+    j = jnp.asarray(rng.uniform(0, 1, (200,)), jnp.float32)
+    states = np.asarray(generate_states(model, j, make_mask(50, seed=seed)))
+    bound = 1.0 / (1.0 - gamma) + 2.0
+    assert np.all(np.isfinite(states))
+    assert states.max() < bound, states.max()
+
+
+def test_literal_mr_diverges():
+    """Paper Eq. (6-7) as printed explode for useful γ (DESIGN.md §7)."""
+    model = SiliconMRLiteral(gamma=0.9)
+    rng = np.random.default_rng(0)
+    j = jnp.asarray(rng.uniform(0, 1, (300,)), jnp.float32)
+    states = np.asarray(generate_states(model, j, make_mask(100, seed=1)))
+    assert states.max() > 1e6
+
+
+def test_fading_memory():
+    """Echo-state property: two different initial states converge under the
+    same input drive (necessary for reservoir computing; paper Section II)."""
+    model = SiliconMR()
+    rng = np.random.default_rng(3)
+    j = jnp.asarray(rng.uniform(0, 1, (1, 400)), jnp.float32)
+    mask = make_mask(40, seed=1)
+    s0a = jnp.zeros((1, 40))
+    s0b = jnp.asarray(rng.uniform(0, 1, (1, 40)), jnp.float32)
+    sa = np.asarray(generate_states(model, j, mask, s0=s0a))
+    sb = np.asarray(generate_states(model, j, mask, s0=s0b))
+    d0 = np.abs(sa[:, 0] - sb[:, 0]).max()
+    d_end = np.abs(sa[:, -1] - sb[:, -1]).max()
+    assert d_end < 1e-3 * max(d0, 1e-9), (d0, d_end)
+
+
+def test_kernel_method_matches_fast():
+    model = SiliconMR()
+    rng = np.random.default_rng(5)
+    j = jnp.asarray(rng.uniform(0, 1, (2, 9)), jnp.float32)
+    mask = make_mask(17, seed=4)
+    fast = generate_states(model, j, mask, method="fast")
+    kern = generate_states(model, j, mask, method="kernel")
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(fast), atol=1e-6)

@@ -1,0 +1,49 @@
+"""Readout training: pinv vs ridge vs kernel-path agreement; exact recovery."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fit_readout
+
+
+def test_exact_recovery_noiseless():
+    """With T >> N and no noise, both methods recover the generating weights."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((400, 20))
+    w_true = rng.standard_normal(21)
+    y = x @ w_true[:-1] + w_true[-1]
+    for method in ("pinv", "ridge"):
+        ro = fit_readout(jnp.asarray(x, jnp.float32), y, method=method, l2=1e-12)
+        pred = np.asarray(ro(jnp.asarray(x, jnp.float32)))
+        assert np.abs(pred - y).max() < 1e-3, method
+
+
+@given(t=st.integers(30, 120), n=st.integers(2, 25), seed=st.integers(0, 20))
+@settings(max_examples=15, deadline=None)
+def test_pinv_and_ridge_agree(t, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((t, n))
+    y = rng.standard_normal(t)
+    a = fit_readout(jnp.asarray(x, jnp.float32), y, method="pinv")
+    b = fit_readout(jnp.asarray(x, jnp.float32), y, method="ridge", l2=1e-12)
+    pa = np.asarray(a(jnp.asarray(x, jnp.float32)))
+    pb = np.asarray(b(jnp.asarray(x, jnp.float32)))
+    np.testing.assert_allclose(pa, pb, atol=1e-2, rtol=1e-2)
+
+
+def test_kernel_path_matches_host_path():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.uniform(0, 1, (300, 50)), jnp.float32)
+    y = rng.standard_normal(300)
+    a = fit_readout(x, y, l2=1e-8)
+    b = fit_readout(x, y, l2=1e-8, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a.w), np.asarray(b.w), atol=1e-3)
+
+
+def test_multi_output():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((100, 10)), jnp.float32)
+    y = rng.standard_normal((100, 3))
+    ro = fit_readout(x, y, l2=1e-10)
+    assert ro(x).shape == (100, 3)
