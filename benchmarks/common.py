@@ -1,17 +1,49 @@
-"""Shared benchmark helpers: run one DFRC accelerator on one task."""
+"""Shared benchmark helpers: run DFRC accelerators on benchmark tasks.
+
+Benchmarks go through the jit-end-to-end pipeline (repro.pipeline): one
+compiled Experiment per accelerator config, batched over task instances —
+``fit_and_eval_batch`` evaluates a whole stack of datasets (seeds, SNR
+points) in a single call instead of a per-config Python loop.
+"""
 
 from __future__ import annotations
 
-from repro.core import DFRCAccelerator
+import numpy as np
+
+from repro.pipeline import Experiment, ExperimentConfig
+
+
+def experiment_for(cfg) -> Experiment:
+    """Experiment from either a core DFRCConfig or an ExperimentConfig."""
+    if not isinstance(cfg, ExperimentConfig):
+        cfg = ExperimentConfig.from_dfrc(cfg)
+    return Experiment(cfg)
+
+
+def _metric(res, metric: str) -> np.ndarray:
+    if metric == "nrmse":
+        return res.nrmse
+    if metric == "ser":
+        return res.ser
+    raise ValueError(metric)
 
 
 def fit_and_eval(cfg, ds, metric: str) -> float:
-    acc = DFRCAccelerator(cfg).fit(ds.inputs_train, ds.targets_train)
-    if metric == "nrmse":
-        return acc.evaluate_nrmse(ds.inputs_test, ds.targets_test)
-    if metric == "ser":
-        return acc.evaluate_ser(ds.inputs_test, ds.targets_test)
-    raise ValueError(metric)
+    """One accelerator on one dataset -> scalar metric (B = 1 pipeline run)."""
+    return float(_metric(experiment_for(cfg).run_dataset(ds), metric)[0])
+
+
+def fit_and_eval_batch(cfg, datasets, metric: str) -> np.ndarray:
+    """One accelerator on a stack of equal-shape datasets -> metric [B].
+
+    All B instances (different seeds / SNRs / task draws) run in ONE jit
+    call, vmapped inside the pipeline.
+    """
+    tr_in = np.stack([d.inputs_train for d in datasets])
+    tr_tg = np.stack([d.targets_train for d in datasets])
+    te_in = np.stack([d.inputs_test for d in datasets])
+    te_tg = np.stack([d.targets_test for d in datasets])
+    return _metric(experiment_for(cfg).run(tr_in, tr_tg, te_in, te_tg), metric)
 
 
 def csv_row(name: str, value, derived: str = "") -> str:

@@ -6,6 +6,10 @@ Reproduction targets (the paper reports relative numbers only):
   * Santa Fe: Silicon MR ≫ MZI (paper: 98.7 % lower), MG slightly best.
 Datasets sized per the paper: NARMA10 2000 (1000/1000), Santa Fe 6000
 (4000/2000, Haken–Lorenz surrogate — DESIGN.md §7).
+
+Each (task, accelerator) cell runs through the jit-end-to-end pipeline
+(repro.pipeline.Experiment via benchmarks.common.fit_and_eval); the device
+model and N differ per cell, so each cell is its own compiled program.
 """
 
 from __future__ import annotations

@@ -2,38 +2,36 @@
 
 Builds the Silicon-MR DFRC accelerator (paper Fig. 4), trains its readout on
 NARMA10, and compares against the two prior-work baselines the paper
-evaluates (Electronic MG, All-Optical MZI).
+evaluates (Electronic MG, All-Optical MZI).  Each accelerator runs through
+the jit-end-to-end pipeline: mask -> reservoir -> ridge readout fit/eval is
+ONE compiled call (repro.pipeline.Experiment) — batch a [B, T] stack of
+inputs to sweep seeds or SNRs in the same call.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import (
-    DFRCAccelerator,
-    DFRCConfig,
-    MZISine,
-    MackeyGlass,
-    SiliconMR,
-    tasks,
-)
+from repro.core import MZISine, MackeyGlass, SiliconMR, tasks
+from repro.pipeline import Experiment, ExperimentConfig
 
 ds = tasks.narma10(2000, seed=0)  # 1000 train / 1000 test, as in the paper
 
+LAMS = (1e-10, 1e-8, 1e-6, 1e-4, 1e-2)
 accelerators = {
-    "Silicon MR (this paper)": DFRCConfig(model=SiliconMR(), n_nodes=400,
-                                          washout=60, ridge_l2=(1e-10, 1e-8, 1e-6, 1e-4, 1e-2)),
-    "Electronic (MG)": DFRCConfig(model=MackeyGlass(), n_nodes=400,
-                                  washout=60, ridge_l2=(1e-10, 1e-8, 1e-6, 1e-4, 1e-2), mask_levels=(-1.0, 1.0)),
-    "All Optical (MZI)": DFRCConfig(model=MZISine(), n_nodes=400,
-                                    washout=60, ridge_l2=(1e-10, 1e-8, 1e-6, 1e-4, 1e-2)),
+    "Silicon MR (this paper)": ExperimentConfig(model=SiliconMR(), n_nodes=400,
+                                                washout=60, ridge_l2=LAMS),
+    "Electronic (MG)": ExperimentConfig(model=MackeyGlass(), n_nodes=400,
+                                        washout=60, ridge_l2=LAMS,
+                                        mask_levels=(-1.0, 1.0)),
+    "All Optical (MZI)": ExperimentConfig(model=MZISine(), n_nodes=400,
+                                          washout=60, ridge_l2=LAMS),
 }
 
 print(f"{'accelerator':28s} NRMSE (NARMA10, lower is better)")
 results = {}
 for name, cfg in accelerators.items():
-    acc = DFRCAccelerator(cfg).fit(ds.inputs_train, ds.targets_train)
-    err = acc.evaluate_nrmse(ds.inputs_test, ds.targets_test)
-    results[name] = err
-    print(f"{name:28s} {err:.4f}")
+    res = Experiment(cfg).run_dataset(ds)   # fit + predict + metric, one jit call
+    results[name] = float(res.nrmse[0])
+    print(f"{name:28s} {results[name]:.4f}")
 
 mr, mzi = results["Silicon MR (this paper)"], results["All Optical (MZI)"]
 print(f"\nSilicon MR vs MZI: {100 * (1 - mr / mzi):.1f}% lower NRMSE "

@@ -38,6 +38,7 @@ import jax
 from repro.configs import get_config, input_specs, list_archs, runnable_cells, SHAPES
 from repro.launch.dryrun import OUT_DIR, build_step, collective_bytes
 from repro.launch.mesh import make_production_mesh
+from repro.compat import use_mesh
 
 
 def _variant(cfg, *, units: int, microbatches: int, enc_layers: int | None = None):
@@ -65,7 +66,7 @@ def _measure(cfg, shape, mesh, batch: int | None = None):
     specs = input_specs(cfg, shape)
     if batch is not None:
         specs = _resize_batch(specs, batch)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         fn, args = build_step(cfg, shape, mesh, specs=specs)
         compiled = fn.lower(*args).compile()
     cost = compiled.cost_analysis()

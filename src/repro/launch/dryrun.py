@@ -39,6 +39,7 @@ from repro.parallel.sharding import (
     param_pspecs,
 )
 from repro.runtime.steps import serve_decode, serve_prefill, train_step
+from repro.compat import shardings_for, use_mesh
 
 OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
@@ -135,8 +136,8 @@ def build_step(cfg, shape: str, mesh, specs=None):
 
         fn = jax.jit(
             step,
-            in_shardings=(state_specs, batch_specs),
-            out_shardings=(state_specs, None),
+            in_shardings=shardings_for(mesh, (state_specs, batch_specs)),
+            out_shardings=shardings_for(mesh, (state_specs, None)),
             donate_argnums=(0,),
         )
         args = ({"params": state_shapes["params"], "opt": state_shapes["opt"],
@@ -169,8 +170,8 @@ def build_step(cfg, shape: str, mesh, specs=None):
             return serve_prefill(cfg, params, tokens, context)
 
         in_sh = (pspecs, bspec["tokens"]) + ((bspec["context"],) if has_ctx else ())
-        fn = jax.jit(step, in_shardings=in_sh,
-                     out_shardings=(batch_pspec(mesh), out_cache_spec))
+        fn = jax.jit(step, in_shardings=shardings_for(mesh, in_sh),
+                     out_shardings=shardings_for(mesh, (batch_pspec(mesh), out_cache_spec)))
         args = (params_shapes, specs["tokens"]) + ((specs["context"],) if has_ctx else ())
         return fn, args
 
@@ -190,8 +191,8 @@ def build_step(cfg, shape: str, mesh, specs=None):
 
         fn = jax.jit(
             step,
-            in_shardings=(pspecs, cache_spec, tok_spec),
-            out_shardings=(tok_spec, cache_spec),
+            in_shardings=shardings_for(mesh, (pspecs, cache_spec, tok_spec)),
+            out_shardings=shardings_for(mesh, (tok_spec, cache_spec)),
             donate_argnums=(1,),
         )
         args = (params_shapes, specs["cache"], specs["tokens"])
@@ -227,7 +228,7 @@ def run_cell(arch: str, shape: str, mesh_name: str, *, force: bool = False,
     cfg = apply_overrides(get_config(arch), overrides)
     mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         fn, args = build_step(cfg, shape, mesh)
         lowered = fn.lower(*args)
         t_lower = time.time() - t0

@@ -23,6 +23,7 @@ from repro.configs import get_config
 from repro.launch.mesh import make_debug_mesh
 from repro.models import init_params
 from repro.runtime.steps import serve_decode, serve_prefill
+from repro.compat import use_mesh
 
 
 def reduced_config(cfg, d_model=128, layers=2, vocab=512):
@@ -62,7 +63,7 @@ def main(argv=None):
     rng = np.random.default_rng(args.seed)
     key = jax.random.PRNGKey(args.seed)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = init_params(cfg, key)
         b = args.requests
         max_len = args.prompt_len + args.new_tokens

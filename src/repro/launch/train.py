@@ -27,6 +27,7 @@ from repro.optim import AdamWConfig
 from repro.parallel.sharding import batch_pspec, named, param_pspecs
 from repro.runtime.steps import init_train_state, train_step
 from repro.runtime.trainer import TrainLoopConfig, run_training
+from repro.compat import shardings_for, use_mesh
 
 
 def reduced_config(cfg, args):
@@ -82,14 +83,15 @@ def main(argv=None):
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                           global_batch=args.batch, seed=args.seed)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         pspecs = param_pspecs(cfg, mesh)
-        state_specs = {"params": pspecs, "opt": {"m": pspecs, "v": pspecs},
-                       "step": jax.sharding.PartitionSpec()}
-        batch_specs = {
+        state_specs = shardings_for(mesh, {
+            "params": pspecs, "opt": {"m": pspecs, "v": pspecs},
+            "step": jax.sharding.PartitionSpec()})
+        batch_specs = shardings_for(mesh, {
             "tokens": batch_pspec(mesh),
             "labels": batch_pspec(mesh),
-        }
+        })
         step_fn = jax.jit(
             lambda s, b: train_step(cfg, opt_cfg, s, b),
             in_shardings=(state_specs, batch_specs),

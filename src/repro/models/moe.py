@@ -30,6 +30,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import get_abstract_mesh
+
 
 def moe_defs(cfg) -> dict:
     d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
@@ -168,8 +170,8 @@ def apply_moe(cfg, p, x):
 
     # -- expert FFNs + combine -----------------------------------------------------
     w = (top_p.reshape(b, s * k) * keep).astype(dt)
-    mesh = jax.sharding.get_abstract_mesh()
-    usable = mesh is not None and not mesh.empty and "model" in mesh.axis_names \
+    mesh = get_abstract_mesh()
+    usable = mesh is not None and "model" in mesh.axis_names \
         and e % mesh.shape["model"] == 0
     if usable:
         # shard_map needs the group axis to divide the batch mesh axes

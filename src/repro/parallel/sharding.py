@@ -24,6 +24,7 @@ from __future__ import annotations
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import get_abstract_mesh
 from repro.models import param_logical_axes
 
 # Candidate mesh axes per logical axis, in preference order.
@@ -239,8 +240,8 @@ def maybe_shard(x, *spec_entries):
     Entries may be axis names, tuples of axis names, or None; names missing
     from the active mesh are dropped from the constraint.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = get_abstract_mesh()
+    if mesh is None:
         return x
     names = set(mesh.axis_names)
 

@@ -1,0 +1,19 @@
+"""Jit-end-to-end batched DFRC experiment pipeline (mask → reservoir →
+ridge readout → metrics) — see experiment.py for the API, ridge.py for the
+in-graph Gram/GCV readout solve."""
+
+from .experiment import Experiment, ExperimentConfig, ExperimentResult, channel_states
+from .ridge import apply_readout, fit_ridge, gram, solve_gcv, solve_gcv_svd, with_bias
+
+__all__ = [
+    "Experiment",
+    "ExperimentConfig",
+    "ExperimentResult",
+    "apply_readout",
+    "channel_states",
+    "fit_ridge",
+    "gram",
+    "solve_gcv",
+    "solve_gcv_svd",
+    "with_bias",
+]

@@ -1,0 +1,250 @@
+"""Jit-end-to-end DFRC experiment pipeline.
+
+One compiled function runs the paper's whole claims path — input layer
+(normalise + sample-and-hold + MLS mask), reservoir layer (``ref`` / ``fast``
+/ ``kernel`` state generation), output layer (streaming-Gram ridge readout
+with GCV λ selection) and the evaluation metrics — *batched over task
+instances*.  Where the host-side ``DFRCAccelerator`` runs one accelerator on
+one series with numpy in the loop, ``Experiment.run`` takes ``[B, T]`` input
+stacks (B independent task instances: seeds, SNR points, hyperparameter
+draws, WDM channels) and produces per-instance predictions and metrics from
+a single jit call, so a sweep compiles once and runs as one XLA program.
+
+Scaling hooks:
+
+* the instance axis is constrained over the ("pod", "data") mesh axes via
+  parallel/sharding.maybe_shard — under an active mesh (compat.use_mesh) the
+  sweep shards across devices with no code change;
+* the Gram accumulation inside the readout fit can run through the
+  kernels/ridge_gram Pallas kernel (``readout_use_kernel=True``), and the
+  reservoir through kernels/dfr_scan (``state_method="kernel"``);
+* ``channel_states`` vmaps state generation over per-channel (mask, input)
+  pairs for WDM-multiplexed reservoir ensembles (examples/wdm_scaling.py).
+
+Numerics note: the readout solve is f32 on device (eigh of the Gram matrix),
+versus the host trainer's float64 SVD; on the paper's tasks the resulting
+NRMSE/SER differences are within the run-to-run seed spread, and the
+regression tests (tests/test_pipeline.py) pin thresholds on this path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masking import make_mask, sample_and_hold
+from repro.core.nonlinear import NLModel, SiliconMR
+from repro.core.reservoir import generate_states
+from repro.core.tasks import SYMBOLS
+from repro.parallel.sharding import maybe_shard
+
+from .ridge import apply_readout, fit_ridge
+
+_SYMBOLS = tuple(float(s) for s in SYMBOLS)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentConfig:
+    """Static (hashable) configuration of one batched DFRC experiment.
+
+    Field semantics mirror core/accelerator.DFRCConfig — see there for the
+    physics rationale of each knob; differences are noted inline.
+    """
+
+    model: NLModel = dataclasses.field(default_factory=SiliconMR)
+    n_nodes: int = 900
+    mask_levels: tuple[float, float] = (0.0, 1.0)
+    mask_seed: int = 1
+    input_gain: float = 1.0
+    normalize_input: bool = True   # per-instance affine map to [0, 1]
+    washout: int = 50
+    ridge_l2: tuple[float, ...] = (1e-6,)   # always a tuple here (GCV-selected)
+    state_noise_rel: float = 0.003
+    noise_seed: int = 0
+    state_method: str = "fast"     # "fast" | "ref" | "kernel"
+    readout_use_kernel: bool = False
+    quantize: bool = False
+
+    def __post_init__(self):
+        if not isinstance(self.ridge_l2, tuple):
+            object.__setattr__(self, "ridge_l2", _as_tuple(self.ridge_l2))
+
+    @classmethod
+    def from_dfrc(cls, cfg) -> "ExperimentConfig":
+        """Lift a core DFRCConfig onto the batched pipeline.
+
+        The pipeline's readout is always the ridge/GCV path (the paper's
+        pinv is the λ→0 limit; core/readout.py keeps the exact pinv for the
+        faithfulness benchmarks).
+        """
+        return cls(
+            model=cfg.model,
+            n_nodes=cfg.n_nodes,
+            mask_levels=tuple(cfg.mask_levels),
+            mask_seed=cfg.mask_seed,
+            input_gain=cfg.input_gain,
+            normalize_input=cfg.normalize_input,
+            washout=cfg.washout,
+            ridge_l2=_as_tuple(cfg.ridge_l2),
+            state_noise_rel=cfg.state_noise_rel,
+            noise_seed=cfg.noise_seed,
+            state_method=cfg.state_method,
+            quantize=cfg.quantize,
+        )
+
+
+def _as_tuple(l2) -> tuple[float, ...]:
+    return tuple(float(v) for v in l2) if isinstance(l2, (tuple, list)) else (float(l2),)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentResult:
+    """Per-instance outputs of one Experiment.run call (host numpy arrays)."""
+
+    y_pred: np.ndarray      # [B, T_test]  (quantized iff cfg.quantize)
+    nrmse: np.ndarray       # [B]
+    ser: np.ndarray         # [B]  (vs 4-PAM quantized predictions)
+    lam: np.ndarray         # [B]  selected ridge λ per instance
+    readout_w: np.ndarray   # [B, N + 1]
+
+    @property
+    def batch(self) -> int:
+        return self.y_pred.shape[0]
+
+
+def _canon_batch(x, name: str) -> jnp.ndarray:
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim == 1:
+        return x[None, :]
+    if x.ndim == 2:
+        return x
+    raise ValueError(f"{name} must be [T] or [B, T], got {x.shape}")
+
+
+def _quantize(y: jnp.ndarray) -> jnp.ndarray:
+    sym = jnp.asarray(_SYMBOLS, y.dtype)
+    return sym[jnp.argmin(jnp.abs(y[..., None] - sym), axis=-1)]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg):
+    """The whole experiment as one XLA program.  All arrays [B, T*]."""
+    # -- input layer: per-instance normalisation + sample-and-hold + gain ----
+    if cfg.normalize_input:
+        lo = jnp.min(tr_in, axis=1, keepdims=True)
+        scale = 1.0 / (jnp.max(tr_in, axis=1, keepdims=True) - lo + 1e-12)
+    else:
+        lo, scale = 0.0, 1.0
+    j_tr = sample_and_hold((tr_in - lo) * scale * cfg.input_gain)
+    j_te = sample_and_hold((te_in - lo) * scale * cfg.input_gain)
+    j_tr = maybe_shard(j_tr, ("pod", "data"))
+    j_te = maybe_shard(j_te, ("pod", "data"))
+
+    # -- reservoir layer: batched state generation, carry train -> test ------
+    st_tr = generate_states(cfg.model, j_tr, mask, method=cfg.state_method)
+    st_te = generate_states(cfg.model, j_te, mask, s0=st_tr[:, -1, :],
+                            method=cfg.state_method)
+    st_tr = maybe_shard(st_tr, ("pod", "data"))
+    st_te = maybe_shard(st_te, ("pod", "data"))
+
+    # -- output layer: digitiser noise + per-instance ridge/GCV fit ----------
+    w = cfg.washout
+    st_fit = st_tr[:, w:]
+    y_fit = tr_tg[:, w:]
+    if cfg.state_noise_rel:
+        sigma = cfg.state_noise_rel * jnp.std(st_fit, axis=(1, 2), keepdims=True)
+        noise = jax.random.normal(jax.random.PRNGKey(cfg.noise_seed), st_fit.shape,
+                                  st_fit.dtype)
+        st_fit = st_fit + sigma * noise
+
+    fit = functools.partial(fit_ridge, lambdas=cfg.ridge_l2,
+                            use_kernel=cfg.readout_use_kernel)
+    if cfg.readout_use_kernel:
+        # pallas_call has no batching rule on all jax versions -> sequential
+        # map over instances (the kernel itself parallelises the stream).
+        w_fit, lam_idx = jax.lax.map(lambda xy: fit(xy[0], xy[1]), (st_fit, y_fit))
+    else:
+        w_fit, lam_idx = jax.vmap(fit)(st_fit, y_fit)
+
+    # -- evaluation -----------------------------------------------------------
+    y_raw = jax.vmap(apply_readout)(st_te, w_fit)      # [B, T_test]
+    y_sym = _quantize(y_raw)
+    err = y_raw - te_tg
+    var = jnp.var(te_tg, axis=1)
+    nrmse = jnp.sqrt(jnp.mean(err * err, axis=1) / (var + 1e-30))
+    ser = jnp.mean((y_sym != te_tg).astype(jnp.float32), axis=1)
+    lam = jnp.asarray(cfg.ridge_l2, jnp.float32)[lam_idx]
+    y_out = y_sym if cfg.quantize else y_raw
+    return y_out, nrmse, ser, lam, w_fit
+
+
+class Experiment:
+    """Batched DFRC experiment: one jit call for fit + predict + metrics.
+
+    >>> exp = Experiment(ExperimentConfig(model=SiliconMR(), n_nodes=200))
+    >>> res = exp.run(tr_in, tr_tg, te_in, te_tg)   # arrays [B, T] (or [T])
+    >>> res.nrmse                                    # [B]
+
+    The compiled program is cached per (config, input shapes) by jax.jit;
+    re-running with new data of the same shape does not recompile.
+    """
+
+    def __init__(self, config: ExperimentConfig):
+        self.config = config
+        self.mask = make_mask(config.n_nodes, levels=config.mask_levels,
+                              seed=config.mask_seed)
+
+    def run(self, inputs_train, targets_train, inputs_test, targets_test) -> ExperimentResult:
+        """Fit readouts and evaluate, one task instance per batch row.
+
+        Every array is [B, T] (or [T], treated as B = 1).  Train/test lengths
+        may differ; all instances in a batch share shapes (stack equal-length
+        series; pad/trim upstream otherwise).
+        """
+        tr_in = _canon_batch(inputs_train, "inputs_train")
+        tr_tg = _canon_batch(targets_train, "targets_train")
+        te_in = _canon_batch(inputs_test, "inputs_test")
+        te_tg = _canon_batch(targets_test, "targets_test")
+        if not (tr_in.shape == tr_tg.shape and te_in.shape == te_tg.shape
+                and tr_in.shape[0] == te_in.shape[0]):
+            raise ValueError(
+                f"inconsistent batch shapes: train {tr_in.shape}/{tr_tg.shape}, "
+                f"test {te_in.shape}/{te_tg.shape}")
+        y, nrmse, ser, lam, w = _run_pipeline(
+            self.config, self.mask, tr_in, tr_tg, te_in, te_tg)
+        return ExperimentResult(
+            y_pred=np.asarray(y), nrmse=np.asarray(nrmse), ser=np.asarray(ser),
+            lam=np.asarray(lam), readout_w=np.asarray(w[..., 0]))
+
+    def run_dataset(self, ds) -> ExperimentResult:
+        """Convenience for a core.tasks Dataset (single instance, B = 1)."""
+        return self.run(ds.inputs_train, ds.targets_train,
+                        ds.inputs_test, ds.targets_test)
+
+
+@functools.partial(jax.jit, static_argnames=("model", "method"))
+def channel_states(model: NLModel, j: jnp.ndarray, masks: jnp.ndarray, *,
+                   s0: jnp.ndarray | None = None, method: str = "fast") -> jnp.ndarray:
+    """WDM ensemble states: per-channel masks over per-channel inputs.
+
+    ``j`` [R, K] (one series per wavelength channel), ``masks`` [R, N] ->
+    states [R, K, N].  ``s0`` [R, N] carries each channel's reservoir state
+    across calls (train -> test).  One vmapped program evaluates all R
+    channels in parallel — the software analogue of R wavelengths sharing
+    the physical ring.
+    """
+    j = jnp.asarray(j, jnp.float32)
+    masks = jnp.asarray(masks, j.dtype)
+    if j.shape[0] != masks.shape[0]:
+        raise ValueError(f"channels mismatch: j {j.shape} vs masks {masks.shape}")
+    if s0 is None:
+        s0 = jnp.zeros((j.shape[0], masks.shape[1]), j.dtype)
+
+    def one(jr, mr, s0r):
+        return generate_states(model, jr, mr, s0=s0r, method=method)
+
+    return jax.vmap(one)(j, masks, s0)

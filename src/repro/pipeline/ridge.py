@@ -1,0 +1,164 @@
+"""In-graph ridge readout: streaming Gram accumulation + GCV λ selection.
+
+The host-side trainer (core/readout.py) solves the readout in float64 with a
+numpy SVD — fine for one accelerator, useless for a jit/vmap sweep.  This
+module is the pure-jax equivalent built on the *Gram* statistics
+
+    G = XᵀX  [F, F],    c = Xᵀy  [F, C],    y2 = ‖y‖²
+
+which are (a) streamable — the T×N state matrix never has to be resident,
+(b) accumulable with the kernels/ridge_gram Pallas kernel, and (c) shardable:
+``gram`` constrains the sample axis over the ("pod", "data") mesh axes via
+parallel/sharding.maybe_shard, so under an active mesh each device reduces
+its local shard of the state stream and GSPMD inserts the psum.
+
+λ selection matches core/readout.py: generalised cross-validation
+
+    GCV(λ) = T·‖y − ŷ_λ‖² / (T − dof(λ))²,   dof(λ) = Σ λᵢ/(λᵢ + λ′)
+
+evaluated from the eigendecomposition G = QΛQᵀ (the λᵢ are the squared
+singular values of X, so dof agrees with the host SVD path), with
+λ′ = λ·tr(G)/F.  Everything — residual, dof, the winning weight vector — is
+a function of (G, c, y2, T) only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import maybe_shard
+
+
+def with_bias(states: jnp.ndarray) -> jnp.ndarray:
+    """Append the constant-1 bias feature: [..., T, N] -> [..., T, N + 1]."""
+    ones = jnp.ones((*states.shape[:-1], 1), dtype=states.dtype)
+    return jnp.concatenate([states, ones], axis=-1)
+
+
+def gram(x: jnp.ndarray, y: jnp.ndarray, *, use_kernel: bool = False):
+    """(G = XᵀX [F, F], c = Xᵀy [F, C]) in f32 from X [T, F], y [T, C].
+
+    ``use_kernel=True`` accumulates with the Pallas streaming kernel
+    (interpret mode off-TPU); the jnp path shards the sample axis.
+    """
+    if use_kernel:
+        from repro.kernels.ridge_gram import ops as gram_ops
+
+        return gram_ops.gram_accumulate(x, y)
+    x32 = maybe_shard(x.astype(jnp.float32), ("pod", "data"))
+    y32 = maybe_shard(y.astype(jnp.float32), ("pod", "data"))
+    return x32.T @ x32, x32.T @ y32
+
+
+def solve_gcv(
+    g: jnp.ndarray,        # [F, F]
+    c: jnp.ndarray,        # [F, C]
+    y2: jnp.ndarray,       # scalar ‖y‖²
+    n_samples: int,
+    lambdas: tuple[float, ...],
+):
+    """Ridge solve (G + λ·tr(G)/F·I)w = c with GCV-selected λ.
+
+    Returns (w [F, C], lam_idx) — ``lam_idx`` indexes the winning entry of
+    the static ``lambdas`` tuple.  A single-element tuple skips nothing but
+    costs one extra reduction; the eigendecomposition dominates either way.
+    """
+    f = g.shape[0]
+    g32 = g.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    evals, q = jnp.linalg.eigh(g32)              # λᵢ ascending; tiny negatives
+    evals = jnp.maximum(evals, 0.0)              # from f32 round-off -> clamp
+    qc = q.T @ c32                               # [F, C]
+    # Rank truncation: eigenvalues below f32 noise are not signal — keeping
+    # them poisons both w (1/λᵢ blow-up) and the residual (the stray qc
+    # energy in a null direction enters as qc²/λ′).  The 4·eps·λmax cutoff
+    # is calibrated on NARMA10: at F·eps real signal directions get dropped
+    # (NRMSE 0.80 vs the host float64 path's 0.60), at 0 the null-space
+    # noise explodes some instances.
+    tol = evals[-1] * jnp.asarray(4 * jnp.finfo(jnp.float32).eps, jnp.float32)
+    valid = evals > tol
+    qc = jnp.where(valid[:, None], qc, 0.0)
+    qc2 = jnp.sum(qc * qc, axis=1)               # [F]
+    lamp = jnp.asarray(lambdas, jnp.float32) * (jnp.sum(evals) / f)  # [L]
+
+    def per_lambda(lam):
+        inv = jnp.where(valid, 1.0 / (evals + lam), 0.0)   # [F]
+        w = q @ (qc * inv[:, None])              # [F, C]
+        dof = jnp.sum(evals * inv)
+        # ‖y − ŷ‖² = ‖y‖² − Σᵢ qcᵢ²·(λᵢ + 2λ′)/(λᵢ + λ′)²  — evaluated in
+        # the eigenbasis; the naive y2 − 2cᵀw + wᵀGw cancels catastrophically
+        # in f32 once cond(G) approaches 1/eps.
+        fit_energy = jnp.sum(qc2 * jnp.where(valid, (evals + 2.0 * lam) * inv * inv, 0.0))
+        rss = jnp.maximum(y2 - fit_energy, 0.0)
+        gcv = n_samples * rss / jnp.maximum(n_samples - dof, 1.0) ** 2
+        return w, gcv
+
+    ws, gcvs = jax.vmap(per_lambda)(lamp)        # [L, F, C], [L]
+    idx = jnp.argmin(gcvs)
+    return ws[idx], idx
+
+
+def solve_gcv_svd(
+    x: jnp.ndarray,        # [T, F]
+    y: jnp.ndarray,        # [T, C]
+    lambdas: tuple[float, ...],
+):
+    """GCV ridge from the SVD of X — the default in-graph solve.
+
+    Works on X directly, so its conditioning is √cond(G): in f32 this
+    matches the host float64 Gram path on every paper task, where the
+    eigh-of-G route loses the small singular directions (cond squares).
+    Use the Gram route (``solve_gcv``) only when X cannot be resident —
+    streaming/kernel accumulation.
+    """
+    x32 = x.astype(jnp.float32)
+    y32 = y.astype(jnp.float32)
+    u, s, vt = jnp.linalg.svd(x32, full_matrices=False)   # [T,F], [F], [F,F]
+    uty = u.T @ y32                                       # [F, C]
+    uy2 = jnp.sum(uty * uty, axis=1)                      # [F]
+    y2 = jnp.sum(y32 * y32)
+    s2 = s * s
+    n_samples = x.shape[0]
+    lamp = jnp.asarray(lambdas, jnp.float32) * (jnp.sum(s2) / x.shape[1])
+
+    def per_lambda(lam):
+        shrink = s2 / (s2 + lam)                          # [F]
+        w = vt.T @ (uty * (s / (s2 + lam))[:, None])      # [F, C]
+        dof = jnp.sum(shrink)
+        rss = jnp.maximum(y2 - jnp.sum((2.0 * shrink - shrink * shrink) * uy2), 0.0)
+        gcv = n_samples * rss / jnp.maximum(n_samples - dof, 1.0) ** 2
+        return w, gcv
+
+    ws, gcvs = jax.vmap(per_lambda)(lamp)
+    idx = jnp.argmin(gcvs)
+    return ws[idx], idx
+
+
+def fit_ridge(
+    states: jnp.ndarray,   # [T, N]
+    targets: jnp.ndarray,  # [T] or [T, C]
+    *,
+    lambdas: tuple[float, ...] = (1e-6,),
+    use_kernel: bool = False,
+):
+    """One-shot readout fit: states -> (w [N + 1, C], lam_idx).
+
+    Pure jax; jit- and vmap-safe (``lambdas`` must be a static tuple).
+    Default path is the SVD-of-X solve; ``use_kernel=True`` switches to the
+    streaming Gram accumulation (Pallas kernel) + eigh solve, trading the
+    last decade of λ-conditioning for never materialising X on device.
+    """
+    y = targets[:, None] if targets.ndim == 1 else targets
+    x = with_bias(states)
+    if use_kernel:
+        g, c = gram(x, y.astype(x.dtype), use_kernel=True)
+        y2 = jnp.sum(y.astype(jnp.float32) ** 2)
+        return solve_gcv(g, c, y2, x.shape[0], tuple(lambdas))
+    return solve_gcv_svd(x, y, tuple(lambdas))
+
+
+def apply_readout(states: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """y = [states, 1] @ w; squeezes a single output channel."""
+    y = with_bias(states) @ w
+    return y[..., 0] if y.shape[-1] == 1 else y

@@ -1,0 +1,117 @@
+"""Kernel-vs-reference parity through the *public* execution paths.
+
+tests/test_kernels.py checks the Pallas kernels against their dedicated
+pure-jnp oracles (dfr_scan_ref / gram_ref).  These tests close the remaining
+gap to the paths users actually dispatch on:
+
+* ``generate_states(method="kernel")`` vs ``method="ref"`` — the reservoir
+  dispatch in core/reservoir.py (what DFRCAccelerator and the pipeline use),
+  not the raw kernel wrapper;
+* the ridge readout fitted from kernel-accumulated Gram statistics vs the
+  pure-jnp solves (pipeline SVD path and core/readout.py host path).
+
+Kernels run in Pallas interpret mode on CPU (TPU is the lowering target), so
+these pass on CPU CI.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MZISine, MackeyGlass, SiliconMR, fit_readout, make_mask
+from repro.core.reservoir import generate_states
+from repro.kernels.ridge_gram import gram_accumulate
+from repro.pipeline import apply_readout, fit_ridge, gram, solve_gcv, with_bias
+
+MODELS = [SiliconMR(), SiliconMR(beta_tpa=0.5), MackeyGlass(), MZISine()]
+LAMS = (1e-6, 1e-4, 1e-2)
+
+
+@pytest.mark.parametrize("model", MODELS, ids=lambda m: type(m).__name__ + str(getattr(m, "beta_tpa", "")))
+@pytest.mark.parametrize("batched", [False, True], ids=["series", "batch"])
+def test_generate_states_kernel_matches_ref(model, batched):
+    """The public "kernel" dispatch equals the sequential oracle dispatch."""
+    rng = np.random.default_rng(3)
+    shape = (5, 40) if batched else (40,)
+    j = jnp.asarray(rng.uniform(0, 1, shape), jnp.float32)
+    mask = make_mask(23, seed=4)
+    out = generate_states(model, j, mask, method="kernel")
+    ref = generate_states(model, j, mask, method="ref")
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_generate_states_kernel_carries_s0():
+    """Initial-state carry (train -> test continuation) through the kernel."""
+    rng = np.random.default_rng(5)
+    j = jnp.asarray(rng.uniform(0, 1, (3, 17)), jnp.float32)
+    mask = make_mask(9, seed=1)
+    s0 = jnp.asarray(rng.uniform(0, 0.4, (3, 9)), jnp.float32)
+    out = generate_states(SiliconMR(), j, mask, s0=s0, method="kernel")
+    ref = generate_states(SiliconMR(), j, mask, s0=s0, method="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_gram_kernel_ridge_matches_pure_jnp_solve():
+    """Readout weights from kernel-accumulated (G, c) match the pure-jnp
+    normal-equation solve at a well-conditioned λ."""
+    rng = np.random.default_rng(7)
+    t, n = 400, 24
+    states = jnp.asarray(rng.uniform(0, 1, (t, n)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(t), jnp.float32)
+
+    w_kernel, _ = fit_ridge(states, y, lambdas=(1e-3,), use_kernel=True)
+
+    x = with_bias(states)
+    g, c = gram(x, y[:, None])
+    g_k, c_k = gram_accumulate(x, y[:, None])
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c), rtol=1e-5, atol=1e-4)
+
+    lamp = 1e-3 * np.trace(np.asarray(g, np.float64)) / g.shape[0]
+    w_np = np.linalg.solve(np.asarray(g, np.float64) + lamp * np.eye(g.shape[0]),
+                           np.asarray(c, np.float64))
+    np.testing.assert_allclose(np.asarray(w_kernel), w_np, rtol=2e-3, atol=2e-3)
+
+
+def test_gram_solve_matches_host_readout():
+    """pipeline solve_gcv (Gram path) ≈ core fit_readout (float64 host path)
+    on a well-conditioned problem, λ selected by the same GCV rule."""
+    rng = np.random.default_rng(11)
+    t, n = 600, 16
+    states = jnp.asarray(rng.uniform(0, 1, (t, n)), jnp.float32)
+    w_true = rng.standard_normal(n + 1)
+    y = np.asarray(with_bias(states)) @ w_true + 0.01 * rng.standard_normal(t)
+    y = jnp.asarray(y, jnp.float32)
+
+    host = fit_readout(states, np.asarray(y), l2=LAMS, method="ridge")
+
+    x = with_bias(states)
+    g, c = gram(x, y[:, None])
+    w_gram, idx = solve_gcv(g, c, jnp.sum(y * y), t, LAMS)
+    np.testing.assert_allclose(np.asarray(w_gram)[:, 0], np.asarray(host.w)[:, 0],
+                               rtol=5e-3, atol=5e-3)
+
+    y_host = np.asarray(host(states))
+    y_gram = np.asarray(apply_readout(states, w_gram))
+    np.testing.assert_allclose(y_gram, y_host, rtol=5e-3, atol=5e-3)
+
+
+def test_pipeline_svd_solve_matches_host_readout():
+    """Default pipeline fit (SVD of X) ≈ host float64 fit on reservoir
+    states — the actual claims path (ill-conditioned, N ~ T/3)."""
+    rng = np.random.default_rng(13)
+    j = jnp.asarray(rng.uniform(0, 1, 360), jnp.float32)
+    mask = make_mask(100, seed=1)
+    states = generate_states(SiliconMR(), j, mask)
+    y = jnp.asarray(rng.standard_normal(360), jnp.float32)
+
+    lams = (1e-8, 1e-6, 1e-4, 1e-2)
+    w_pipe, _ = fit_ridge(states, y, lambdas=lams)
+    host = fit_readout(states, np.asarray(y), l2=lams, method="ridge")
+
+    y_pipe = np.asarray(apply_readout(states, w_pipe))
+    y_host = np.asarray(host(states))
+    # same λ grid + same GCV rule; f32-vs-f64 differences stay small on
+    # the *predictions* even where individual weights differ
+    assert np.max(np.abs(y_pipe - y_host)) < 1e-2, np.max(np.abs(y_pipe - y_host))

@@ -1,7 +1,10 @@
 """Multi-device behaviours (pipeline parallelism, compressed psum, sharded
 train step).  These need >1 device, so each test runs in a subprocess with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 — keeping the main test
-process single-device per the dry-run contract."""
+process single-device per the dry-run contract.
+
+Marked ``multidev``: excluded from the tier-1 run (pytest.ini), executed by
+the CI multidev job / `pytest -m multidev`."""
 
 import os
 import subprocess
@@ -9,6 +12,8 @@ import sys
 import textwrap
 
 import pytest
+
+pytestmark = pytest.mark.multidev
 
 
 def _run(src: str):
@@ -54,8 +59,9 @@ def test_compressed_psum_error_feedback():
         from jax.sharding import PartitionSpec as P
         from repro.optim.compression import compressed_psum
 
-        mesh = jax.make_mesh((8,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+
+        mesh = make_mesh((8,), ("pod",))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 64, 37))
 
         def sync(g_local, err):
@@ -91,13 +97,16 @@ def test_sharded_train_step_runs_on_mesh():
         cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
                           d_ff=128, vocab_size=128, dtype="float32", remat="none",
                           microbatches=2)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
-        with jax.set_mesh(mesh):
+        from repro.compat import make_mesh, shardings_for, use_mesh
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        with use_mesh(mesh):
             pspecs = param_pspecs(cfg, mesh)
-            sspecs = {"params": pspecs, "opt": {"m": pspecs, "v": pspecs},
-                      "step": jax.sharding.PartitionSpec()}
-            bspecs = {"tokens": batch_pspec(mesh), "labels": batch_pspec(mesh)}
+            sspecs = shardings_for(mesh, {
+                "params": pspecs, "opt": {"m": pspecs, "v": pspecs},
+                "step": jax.sharding.PartitionSpec()})
+            bspecs = shardings_for(mesh, {"tokens": batch_pspec(mesh),
+                                          "labels": batch_pspec(mesh)})
             fn = jax.jit(lambda s, b: train_step(cfg, AdamWConfig(lr=1e-3), s, b),
                          in_shardings=(sspecs, bspecs), out_shardings=(sspecs, None),
                          donate_argnums=(0,))
@@ -111,4 +120,33 @@ def test_sharded_train_step_runs_on_mesh():
                 losses.append(float(metrics["loss"]))
         assert losses[-1] < losses[0], losses
         print("sharded train OK", losses)
+    """)
+
+
+def test_pipeline_experiment_shards_over_mesh():
+    """The jit-end-to-end Experiment sweep under an active mesh: the task
+    instance axis shards over the data axis via parallel/sharding.maybe_shard
+    (default SVD readout; the streaming Gram path has its own parity tests),
+    and results match the single-device run."""
+    _run("""
+        import numpy as np
+        from repro.compat import make_mesh, use_mesh
+        from repro.core import SiliconMR, tasks
+        from repro.pipeline import Experiment, ExperimentConfig
+
+        dss = [tasks.narma10(360, seed=s) for s in range(8)]
+        batch = (np.stack([d.inputs_train for d in dss]),
+                 np.stack([d.targets_train for d in dss]),
+                 np.stack([d.inputs_test for d in dss]),
+                 np.stack([d.targets_test for d in dss]))
+        cfg = ExperimentConfig(model=SiliconMR(), n_nodes=32, washout=40,
+                               ridge_l2=(1e-6, 1e-4))
+        res_single = Experiment(cfg).run(*batch)
+
+        mesh = make_mesh((8,), ("data",))
+        with use_mesh(mesh):
+            res_mesh = Experiment(cfg).run(*batch)
+        np.testing.assert_allclose(res_mesh.nrmse, res_single.nrmse, atol=1e-4)
+        assert np.all(res_mesh.nrmse < 1.0)
+        print("sharded experiment OK", np.round(res_mesh.nrmse, 3))
     """)

@@ -6,14 +6,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import abstract_mesh
 from repro.configs import get_config, input_specs, list_archs
 from repro.models import init_params
 from repro.parallel.sharding import batch_pspec, cache_pspecs, param_pspecs, spec_for
 
-POD = AbstractMesh((16, 16), ("data", "model"))
-MULTIPOD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+POD = abstract_mesh((16, 16), ("data", "model"))
+MULTIPOD = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 ARCHS = list_archs(include_extras=True)
 
