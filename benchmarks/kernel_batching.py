@@ -1,0 +1,151 @@
+"""Kernel-path batching benchmark: padded-lane waste, old vs new tiling.
+
+Quantifies what ISSUE 2 fixes.  For the reservoir scan, the old behaviour
+(fixed ``block_s = 8``) pads every batch to a multiple of 8 × 128 = 1024
+lanes — a B = 8 sweep runs 128× wasted reservoir work — while the auto
+heuristic (smallest block_s ∈ {1, 2, 4, 8} covering B) pads B ≤ 128 to a
+single 128-lane vreg row.  For the readout, the old per-instance
+``lax.map`` of ``gram_accumulate`` launches is compared against ONE
+batch-gridded ``gram_accumulate_batched`` call.
+
+Emits ``BENCH_kernel_batching.json``:
+
+  {"reservoir": [{batch, tiling, block_s, lanes, padded_lane_fraction,
+                  wall_us}, ...],
+   "readout":   [{batch, path, wall_us}, ...]}
+
+Wall times are interpret-mode (CPU) functional numbers off-TPU — the
+padded-lane fractions are exact either way and are what CI gates on: the
+``--smoke`` run fails if auto-tiling at B = 8 pads beyond 128 lanes.
+
+  PYTHONPATH=src python -m benchmarks.kernel_batching [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SiliconMR, make_mask
+from repro.kernels.dfr_scan import auto_block_s, dfr_scan, padded_lanes
+from repro.kernels.ridge_gram import gram_accumulate, gram_accumulate_batched
+
+from .common import csv_row
+
+BATCHES = (1, 8, 64, 512)
+
+
+def _time(fn, *args, iters: int = 3) -> float:
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def reservoir_section(*, k: int, n: int, iters: int) -> list[dict]:
+    model = SiliconMR()
+    mask = make_mask(n, seed=1)
+    rng = np.random.default_rng(0)
+    entries = []
+    for b in BATCHES:
+        j = jnp.asarray(rng.uniform(0, 1, (b, k)), jnp.float32)
+        s0 = jnp.zeros((b, n), jnp.float32)
+        for tiling, block_s in (("fixed8", 8), ("auto", auto_block_s(b))):
+            lanes = padded_lanes(b, block_s)
+            us = _time(lambda jj, ss, bs=block_s: dfr_scan(model, jj, mask, ss, block_s=bs),
+                       j, s0, iters=iters)
+            entries.append({
+                "batch": b,
+                "tiling": tiling,
+                "block_s": block_s,
+                "lanes": lanes,
+                "padded_lane_fraction": (lanes - b) / lanes,
+                "wall_us": round(us, 1),
+            })
+    return entries
+
+
+def readout_section(*, t: int, f: int, iters: int) -> list[dict]:
+    rng = np.random.default_rng(1)
+    entries = []
+    for b in BATCHES:
+        x = jnp.asarray(rng.standard_normal((b, t, f)), jnp.float32)
+        y = jnp.asarray(rng.standard_normal((b, t, 1)), jnp.float32)
+
+        def mapped(xx, yy):
+            return jax.lax.map(lambda xy: gram_accumulate(xy[0], xy[1]), (xx, yy))
+
+        # Both paths jitted end-to-end so the eager pad/slice dispatch in the
+        # Python wrappers doesn't skew the comparison.
+        for path, fn in (("map", jax.jit(mapped)),
+                         ("batched", jax.jit(gram_accumulate_batched))):
+            entries.append({
+                "batch": b,
+                "path": path,
+                "wall_us": round(_time(fn, x, y, iters=iters), 1),
+            })
+    return entries
+
+
+def check(report: dict) -> list[str]:
+    """Gate the batching fix: auto-tiling must not over-pad small sweeps."""
+    failures = []
+    for e in report["reservoir"]:
+        if e["tiling"] == "auto" and e["batch"] <= 128 and e["lanes"] > 128:
+            failures.append(f"auto tiling at B={e['batch']} pads to {e['lanes']} lanes (> 128)")
+    return failures
+
+
+def build_report(*, smoke: bool) -> dict:
+    k, n, t, f = (4, 8, 64, 16) if smoke else (64, 64, 512, 64)
+    iters = 1 if smoke else 3
+    return {
+        "config": {"backend": jax.default_backend(), "smoke": smoke,
+                   "reservoir": {"K": k, "N": n}, "readout": {"T": t, "F": f}},
+        "reservoir": reservoir_section(k=k, n=n, iters=iters),
+        "readout": readout_section(t=t, f=f, iters=iters),
+    }
+
+
+def run() -> list[str]:
+    """benchmarks.run section: CSV rows + the JSON artifact."""
+    report = build_report(smoke=False)
+    with open("BENCH_kernel_batching.json", "w") as fh:
+        json.dump(report, fh, indent=2)
+    failures = check(report)
+    if failures:  # same regression gate as --smoke; run.py reports + exits 1
+        raise AssertionError("kernel_batching check FAILED: " + "; ".join(failures))
+    rows = []
+    for e in report["reservoir"]:
+        rows.append(csv_row(f"kernel_batching/reservoir_B{e['batch']}_{e['tiling']}_us",
+                            f"{e['wall_us']:.0f}",
+                            f"lanes={e['lanes']};padfrac={e['padded_lane_fraction']:.3f}"))
+    for e in report["readout"]:
+        rows.append(csv_row(f"kernel_batching/readout_B{e['batch']}_{e['path']}_us",
+                            f"{e['wall_us']:.0f}", ""))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / 1 iter (CI gate on padded-lane fractions)")
+    ap.add_argument("--out", default="BENCH_kernel_batching.json")
+    args = ap.parse_args()
+    report = build_report(smoke=args.smoke)
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(json.dumps(report, indent=2))
+    failures = check(report)
+    if failures:
+        raise SystemExit("kernel_batching check FAILED: " + "; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

@@ -14,10 +14,11 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list of fig5,fig6,fig7,table1,kernels,roofline")
+                    help="comma list of fig5,fig6,fig7,table1,kernels,kernel_batching,roofline")
     args = ap.parse_args()
 
-    from . import fig5_nrmse, fig6_ser, fig7_training_time, kernel_bench, roofline, table1_power
+    from . import (fig5_nrmse, fig6_ser, fig7_training_time, kernel_batching,
+                   kernel_bench, roofline, table1_power)
 
     sections = {
         "fig5": fig5_nrmse.run,
@@ -25,6 +26,7 @@ def main() -> None:
         "fig7": fig7_training_time.run,
         "table1": table1_power.run,
         "kernels": kernel_bench.run,
+        "kernel_batching": kernel_batching.run,
         "roofline": roofline.run,
     }
     chosen = args.only.split(",") if args.only else list(sections)

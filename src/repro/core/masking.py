@@ -7,10 +7,11 @@ with delay systems", Sci. Rep. 4, 3629 (2014) [paper ref 25].  The mask plays
 the role of the fixed random input weights W_in: node i of every period sees
 input u[k, i] = j[k] * m[i].
 
-MLS are generated with a Fibonacci LFSR over GF(2) using primitive-polynomial
-taps, giving a pseudo-random ±1 sequence of period 2**m - 1 with ideal
-autocorrelation.  For N virtual nodes we take the first N entries of the
-smallest MLS with period >= N (Appeltant et al. do the same truncation).
+MLS are generated with a *Galois*-form LFSR over GF(2) using
+primitive-polynomial taps (``mls_sequence``), giving a pseudo-random ±1
+sequence of period 2**m - 1 with ideal autocorrelation.  For N virtual nodes
+we take the first N entries of the smallest MLS with period >= N (Appeltant
+et al. do the same truncation).
 """
 
 from __future__ import annotations
@@ -18,8 +19,13 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-# Primitive polynomial taps (1-indexed bit positions fed back, Fibonacci LFSR)
-# for register lengths 2..16.  Standard tables (Xilinx XAPP052 / Golomb).
+# Primitive polynomial taps (1-indexed exponents of the feedback polynomial)
+# for register lengths 2..16, from the standard Fibonacci-form tables (Xilinx
+# XAPP052 / Golomb).  mls_sequence applies them as the XOR mask of a *Galois*
+# LFSR: that realises the reciprocal polynomial x^m·p(1/x), which is primitive
+# iff p is, so the register still cycles through all 2**m − 1 nonzero states —
+# the emitted m-sequence is the time-reverse of the Fibonacci one, and every
+# m-sequence property (period, balance, ideal autocorrelation) is preserved.
 _PRIMITIVE_TAPS: dict[int, tuple[int, ...]] = {
     2: (2, 1),
     3: (3, 2),

@@ -84,11 +84,14 @@ def generate_states(
     *,
     s0: jnp.ndarray | None = None,
     method: str = "fast",
+    block_s: int | None = None,
 ) -> jnp.ndarray:
     """DFR states for sample series ``j`` [..., K] -> [..., K, N].
 
     ``method``: "fast" (default), "ref" (sequential oracle) or "kernel"
-    (Pallas; interpret-mode on CPU).
+    (Pallas; interpret-mode on CPU).  ``block_s`` sizes the kernel's sublane
+    tile (None = smallest of {1, 2, 4, 8} covering the batch — see
+    kernels/dfr_scan/ops.py); ignored by the jnp paths.
     """
     jb, squeeze = _canon(j)
     n_nodes = int(mask.shape[-1])
@@ -102,7 +105,7 @@ def generate_states(
     if method == "kernel":
         from repro.kernels.dfr_scan import ops as dfr_ops
 
-        states = dfr_ops.dfr_scan(model, jb, mask, s0b)
+        states = dfr_ops.dfr_scan(model, jb, mask, s0b, block_s=block_s)
     else:
         u = masked_input(jb, mask)
         if method == "ref":

@@ -1,5 +1,5 @@
 from . import ops, ref
-from .ops import dfr_scan
+from .ops import auto_block_s, dfr_scan, padded_lanes
 from .ref import dfr_scan_ref
 
-__all__ = ["dfr_scan", "dfr_scan_ref", "ops", "ref"]
+__all__ = ["auto_block_s", "dfr_scan", "dfr_scan_ref", "ops", "padded_lanes", "ref"]

@@ -4,6 +4,12 @@ Canonicalises [B, K] batches into the kernel's (S sublanes × 128 lanes)
 tiling, pads the batch to a tile boundary, and restores [B, K, N] on the way
 out.  On non-TPU backends the kernel runs in interpret mode (CPU-validated,
 TPU-targeted); ``interpret`` can be forced either way.
+
+``block_s`` sizes the sublane tile.  The default (``None``) picks the
+smallest tile in {1, 2, 4, 8} that covers the batch, so small sweeps don't
+pay for lanes they never use: a fixed block_s = 8 pads every batch to a
+multiple of 1024 lanes (a B = 8 sweep would run 128× wasted reservoir work),
+whereas auto-tiling pads B ≤ 128 to one 128-lane vreg row.
 """
 
 from __future__ import annotations
@@ -13,9 +19,29 @@ import jax.numpy as jnp
 
 from .dfr_scan import LANES, dfr_scan_tiled
 
+_BLOCK_S_CHOICES = (1, 2, 4, 8)
+
 
 def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def auto_block_s(batch: int) -> int:
+    """Smallest sublane tile in {1, 2, 4, 8} whose (block_s, 128) tile covers
+    ``batch``; 8 (a full f32 vreg) once the batch spans multiple tiles."""
+    sublanes = -(-batch // LANES)
+    for cand in _BLOCK_S_CHOICES:
+        if cand >= sublanes:
+            return cand
+    return _BLOCK_S_CHOICES[-1]
+
+
+def padded_lanes(batch: int, block_s: int | None = None) -> int:
+    """Total batch lanes (incl. padding) the kernel runs for ``batch``."""
+    if block_s is None:
+        block_s = auto_block_s(batch)
+    tile = block_s * LANES
+    return batch + (-batch % tile)
 
 
 def dfr_scan(
@@ -24,7 +50,7 @@ def dfr_scan(
     mask: jnp.ndarray,   # [N]
     s0: jnp.ndarray,     # [B, N]
     *,
-    block_s: int = 8,
+    block_s: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:        # [B, K, N]
     if interpret is None:
@@ -32,6 +58,10 @@ def dfr_scan(
     j = jnp.asarray(j)
     b, k_periods = j.shape
     n_nodes = int(mask.shape[-1])
+    if block_s is None:
+        block_s = auto_block_s(b)
+    elif block_s not in _BLOCK_S_CHOICES:
+        raise ValueError(f"block_s must be one of {_BLOCK_S_CHOICES}, got {block_s}")
 
     tile = block_s * LANES
     b_pad = -b % tile

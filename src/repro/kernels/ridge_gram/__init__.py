@@ -1,5 +1,13 @@
 from . import ops, ref
-from .ops import gram_accumulate
-from .ref import gram_ref
+from .ops import effective_block_t, gram_accumulate, gram_accumulate_batched
+from .ref import gram_ref, gram_ref_batched
 
-__all__ = ["gram_accumulate", "gram_ref", "ops", "ref"]
+__all__ = [
+    "effective_block_t",
+    "gram_accumulate",
+    "gram_accumulate_batched",
+    "gram_ref",
+    "gram_ref_batched",
+    "ops",
+    "ref",
+]

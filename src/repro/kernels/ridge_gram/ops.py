@@ -1,7 +1,12 @@
-"""Public jit'd wrapper for the Gram accumulation Pallas kernel.
+"""Public jit'd wrappers for the Gram accumulation Pallas kernel.
 
 Pads T and F to tile boundaries (zero rows/cols contribute nothing to XᵀX)
 and strips the padding from the outputs.  Interpret mode off-TPU.
+
+``gram_accumulate`` is the single-instance [T, F] API;
+``gram_accumulate_batched`` runs a whole [B, T, F] instance stack as ONE
+kernel launch with a leading batch grid dimension — the batched readout fit
+in pipeline/ridge.py uses it to avoid a sequential per-instance loop.
 """
 
 from __future__ import annotations
@@ -9,11 +14,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .ridge_gram import gram_tiled
+from .ridge_gram import gram_tiled, gram_tiled_batched
 
 
 def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def effective_block_t(t: int, block_t: int = 512) -> int:
+    """Clamp the requested T tile to the stream length, sublane-aligned.
+
+    TPU f32 tiling needs the sublane (second-to-last) block dimension to be a
+    multiple of 8; a naive ``min(block_t, t)`` produces e.g. a (100, 128)
+    block for T = 100, which fails to lower.  Round the clamped tile UP to a
+    multiple of 8 and let the caller pad T to match — zero rows are free.
+    """
+    eff = min(block_t, max(8, t))
+    return -(-eff // 8) * 8
 
 
 def gram_accumulate(
@@ -32,10 +49,43 @@ def gram_accumulate(
     if y.ndim == 1:
         y = y[:, None]
     t, f = x.shape
-    block_t = min(block_t, max(8, t))
+    block_t = effective_block_t(t, block_t)
     t_pad = -t % block_t
     f_pad = -f % block_f
     xp = jnp.pad(x, ((0, t_pad), (0, f_pad)))
     yp = jnp.pad(y.astype(x.dtype), ((0, t_pad), (0, 0)))
     g, c = gram_tiled(xp, yp, block_t=block_t, block_f=block_f, interpret=interpret)
     return g[:f, :f], c[:f]
+
+
+def gram_accumulate_batched(
+    x: jnp.ndarray,  # [B, T, F]
+    y: jnp.ndarray,  # [B, T] or [B, T, C]
+    *,
+    block_t: int = 512,
+    block_f: int = 128,
+    interpret: bool | None = None,
+):
+    """Per-instance (G [B, F, F] f32, c [B, F, C] f32), one kernel launch.
+
+    The batch axis becomes the outermost grid dimension of the kernel, so B
+    instances share one ``pallas_call`` instead of a host/``lax.map`` loop.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    if y.ndim == 2:
+        y = y[..., None]
+    if x.ndim != 3 or y.ndim != 3 or y.shape[:2] != x.shape[:2]:
+        raise ValueError(f"expected x [B, T, F] with y [B, T(, C)], got "
+                         f"{x.shape} / {y.shape}")
+    _, t, f = x.shape
+    block_t = effective_block_t(t, block_t)
+    t_pad = -t % block_t
+    f_pad = -f % block_f
+    xp = jnp.pad(x, ((0, 0), (0, t_pad), (0, f_pad)))
+    yp = jnp.pad(y.astype(x.dtype), ((0, 0), (0, t_pad), (0, 0)))
+    g, c = gram_tiled_batched(xp, yp, block_t=block_t, block_f=block_f,
+                              interpret=interpret)
+    return g[:, :f, :f], c[:, :f]

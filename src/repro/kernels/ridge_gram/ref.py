@@ -1,6 +1,7 @@
 """Pure-jnp oracle for the streaming Gram/moment accumulation kernel.
 
 X [T, F], Y [T, C]  ->  G = XᵀX [F, F],  c = XᵀY [F, C], accumulated in f32.
+``gram_ref_batched`` is the per-instance [B, ...] form.
 """
 
 from __future__ import annotations
@@ -12,3 +13,10 @@ def gram_ref(x: jnp.ndarray, y: jnp.ndarray):
     x32 = x.astype(jnp.float32)
     y32 = y.astype(jnp.float32)
     return x32.T @ x32, x32.T @ y32
+
+
+def gram_ref_batched(x: jnp.ndarray, y: jnp.ndarray):
+    x32 = x.astype(jnp.float32)
+    y32 = y.astype(jnp.float32)
+    return (jnp.einsum("btf,btg->bfg", x32, x32),
+            jnp.einsum("btf,btc->bfc", x32, y32))

@@ -7,16 +7,22 @@ that accumulates the Gram matrix G = XᵀX and moment c = Xᵀy tile-by-tile on
 the MXU, so the state matrix never has to be HBM-resident at once — T can be
 arbitrarily long for a fixed F = N+1.
 
-  grid = (I, J, T_tiles)   (T innermost: sequential accumulation)
-  X  [T, F]   lhs block [block_t, block_f] @ (t, i)   (re-read per J — see ops)
-  X  [T, F]   rhs block [block_t, block_f] @ (t, j)
-  Y  [T, C]   block [block_t, C]           @ (t, 0)
-  G  [F, F]   block [block_f, block_f]     @ (i, j)
-  c  [F, C]   block [block_f, C]           @ (i, 0)   (accumulated at j == 0)
+The grid carries a leading *batch* dimension so a whole sweep of B task
+instances is one kernel launch (the pipeline's vmap axis), instead of a
+sequential ``lax.map`` of B launches:
+
+  grid = (B, I, J, T_tiles)   (T innermost: sequential accumulation)
+  X  [B, T, F]   lhs block [1, block_t, block_f] @ (b, t, i)   (re-read per J)
+  X  [B, T, F]   rhs block [1, block_t, block_f] @ (b, t, j)
+  Y  [B, T, C]   block [1, block_t, C]           @ (b, t, 0)
+  G  [B, F, F]   block [1, block_f, block_f]     @ (b, i, j)
+  c  [B, F, C]   block [1, block_f, C]           @ (b, i, 0)  (accumulated at j == 0)
 
 Accumulators live in VMEM scratch in f32 (MXU partials in f32 via
-``preferred_element_type``) and are flushed to HBM on the last T step —
-bf16/f32 inputs give identical G up to f32 accumulation order.
+``preferred_element_type``) and are flushed to HBM on the last T step of each
+(b, i, j) tile — the t == 0 re-zero makes the scratch per-instance, so batch
+lanes never mix.  bf16/f32 inputs give identical G up to f32 accumulation
+order.  The B = 1 wrapper ``gram_tiled`` serves the single-instance API.
 """
 
 from __future__ import annotations
@@ -30,17 +36,18 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(n_t_tiles, xl_ref, xr_ref, y_ref, g_ref, c_ref, g_acc, c_acc):
-    t = pl.program_id(2)
-    j = pl.program_id(1)
+    t = pl.program_id(3)
+    j = pl.program_id(2)
 
+    # First T step of this (b, i, j) tile: reset the per-instance accumulator.
     @pl.when(t == 0)
     def _zero():
         g_acc[...] = jnp.zeros_like(g_acc)
         c_acc[...] = jnp.zeros_like(c_acc)
 
-    xl = xl_ref[...]
+    xl = xl_ref[0]
     g_acc[...] += jax.lax.dot_general(
-        xl, xr_ref[...],
+        xl, xr_ref[0],
         dimension_numbers=(((0,), (0,)), ((), ())),  # xlᵀ @ xr, contraction over T
         preferred_element_type=jnp.float32,
     )
@@ -48,20 +55,58 @@ def _kernel(n_t_tiles, xl_ref, xr_ref, y_ref, g_ref, c_ref, g_acc, c_acc):
     @pl.when(j == 0)
     def _moment():
         c_acc[...] += jax.lax.dot_general(
-            xl, y_ref[...],
+            xl, y_ref[0],
             dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
 
     @pl.when(t == n_t_tiles - 1)
     def _flush_g():
-        g_ref[...] = g_acc[...]
+        g_ref[0] = g_acc[...]
 
-    # c's output block maps to (i, 0) for every j; only the j == 0 pass
+    # c's output block maps to (b, i, 0) for every j; only the j == 0 pass
     # accumulates it, so only that pass may flush it.
     @pl.when(jnp.logical_and(t == n_t_tiles - 1, j == 0))
     def _flush_c():
-        c_ref[...] = c_acc[...]
+        c_ref[0] = c_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f", "interpret"))
+def gram_tiled_batched(
+    x: jnp.ndarray,  # [B, T, F], T % block_t == 0, F % block_f == 0
+    y: jnp.ndarray,  # [B, T, C]
+    *,
+    block_t: int = 512,
+    block_f: int = 128,
+    interpret: bool = False,
+):
+    batch, t_total, f_total = x.shape
+    c_cols = y.shape[-1]
+    grid = (batch, f_total // block_f, f_total // block_f, t_total // block_t)
+
+    kernel = functools.partial(_kernel, grid[3])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_f), lambda b, i, j, t: (b, t, i)),
+            pl.BlockSpec((1, block_t, block_f), lambda b, i, j, t: (b, t, j)),
+            pl.BlockSpec((1, block_t, c_cols), lambda b, i, j, t: (b, t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_f, block_f), lambda b, i, j, t: (b, i, j)),
+            pl.BlockSpec((1, block_f, c_cols), lambda b, i, j, t: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, f_total, f_total), jnp.float32),
+            jax.ShapeDtypeStruct((batch, f_total, c_cols), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_f, block_f), jnp.float32),
+            pltpu.VMEM((block_f, c_cols), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, x, y)
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_f", "interpret"))
@@ -73,30 +118,7 @@ def gram_tiled(
     block_f: int = 128,
     interpret: bool = False,
 ):
-    t_total, f_total = x.shape
-    c_cols = y.shape[1]
-    grid = (f_total // block_f, f_total // block_f, t_total // block_t)
-
-    kernel = functools.partial(_kernel, grid[2])
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_t, block_f), lambda i, j, t: (t, i)),
-            pl.BlockSpec((block_t, block_f), lambda i, j, t: (t, j)),
-            pl.BlockSpec((block_t, c_cols), lambda i, j, t: (t, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_f, block_f), lambda i, j, t: (i, j)),
-            pl.BlockSpec((block_f, c_cols), lambda i, j, t: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((f_total, f_total), jnp.float32),
-            jax.ShapeDtypeStruct((f_total, c_cols), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_f, block_f), jnp.float32),
-            pltpu.VMEM((block_f, c_cols), jnp.float32),
-        ],
-        interpret=interpret,
-    )(x, x, y)
+    """Single-instance entry point: the batched kernel at B = 1."""
+    g, c = gram_tiled_batched(x[None], y[None], block_t=block_t,
+                              block_f=block_f, interpret=interpret)
+    return g[0], c[0]

@@ -3,7 +3,8 @@ ridge readout → metrics) — see experiment.py for the API, ridge.py for the
 in-graph Gram/GCV readout solve."""
 
 from .experiment import Experiment, ExperimentConfig, ExperimentResult, channel_states
-from .ridge import apply_readout, fit_ridge, gram, solve_gcv, solve_gcv_svd, with_bias
+from .ridge import (apply_readout, fit_ridge, fit_ridge_batched, gram, solve_gcv,
+                    solve_gcv_svd, with_bias)
 
 __all__ = [
     "Experiment",
@@ -12,6 +13,7 @@ __all__ = [
     "apply_readout",
     "channel_states",
     "fit_ridge",
+    "fit_ridge_batched",
     "gram",
     "solve_gcv",
     "solve_gcv_svd",

@@ -42,7 +42,7 @@ from repro.core.reservoir import generate_states
 from repro.core.tasks import SYMBOLS
 from repro.parallel.sharding import maybe_shard
 
-from .ridge import apply_readout, fit_ridge
+from .ridge import apply_readout, fit_ridge_batched
 
 _SYMBOLS = tuple(float(s) for s in SYMBOLS)
 
@@ -68,6 +68,12 @@ class ExperimentConfig:
     state_method: str = "fast"     # "fast" | "ref" | "kernel"
     readout_use_kernel: bool = False
     quantize: bool = False
+    # Pallas tiling knobs (only read by the kernel paths):
+    #   kernel_block_s — dfr_scan sublane tile; None = smallest of {1, 2, 4, 8}
+    #     covering the batch (a B ≤ 128 sweep pads to 128 lanes, not 1024).
+    #   readout_block_t — ridge_gram T tile (sublane-aligned internally).
+    kernel_block_s: int | None = None
+    readout_block_t: int = 512
 
     def __post_init__(self):
         if not isinstance(self.ridge_l2, tuple):
@@ -103,13 +109,18 @@ def _as_tuple(l2) -> tuple[float, ...]:
 
 @dataclasses.dataclass(frozen=True)
 class ExperimentResult:
-    """Per-instance outputs of one Experiment.run call (host numpy arrays)."""
+    """Per-instance outputs of one Experiment.run call (host numpy arrays).
 
-    y_pred: np.ndarray      # [B, T_test]  (quantized iff cfg.quantize)
-    nrmse: np.ndarray       # [B]
+    Single-channel targets (the common case) keep the historical 2-D shapes;
+    C > 1 output channels add a trailing channel axis instead of being
+    silently dropped.
+    """
+
+    y_pred: np.ndarray      # [B, T_test] (or [B, T_test, C]); quantized iff cfg.quantize
+    nrmse: np.ndarray       # [B]  (mean of per-channel NRMSEs for C > 1)
     ser: np.ndarray         # [B]  (vs 4-PAM quantized predictions)
     lam: np.ndarray         # [B]  selected ridge λ per instance
-    readout_w: np.ndarray   # [B, N + 1]
+    readout_w: np.ndarray   # [B, N + 1] (or [B, N + 1, C])
 
     @property
     def batch(self) -> int:
@@ -123,6 +134,25 @@ def _canon_batch(x, name: str) -> jnp.ndarray:
     if x.ndim == 2:
         return x
     raise ValueError(f"{name} must be [T] or [B, T], got {x.shape}")
+
+
+def _canon_targets(x, name: str, inputs: jnp.ndarray) -> jnp.ndarray:
+    """Targets matching ``inputs`` [B, T]: returns [B, T] or [B, T, C].
+
+    A trailing channel axis is kept only for C > 1 ([B, T, 1] squeezes to
+    [B, T]), so single-channel results keep their historical shapes.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    b, t = inputs.shape
+    if x.ndim == 1:
+        x = x[None, :]
+    elif x.ndim == 2 and b == 1 and x.shape != (b, t) and x.shape[0] == t:
+        x = x[None, :, :]            # [T, C] with 1-D inputs
+    if x.ndim == 3 and x.shape[-1] == 1:
+        x = x[..., 0]
+    if x.shape[:2] != (b, t):
+        raise ValueError(f"{name} shape {x.shape} does not match inputs ({b}, {t})")
+    return x
 
 
 def _quantize(y: jnp.ndarray) -> jnp.ndarray:
@@ -145,9 +175,10 @@ def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg):
     j_te = maybe_shard(j_te, ("pod", "data"))
 
     # -- reservoir layer: batched state generation, carry train -> test ------
-    st_tr = generate_states(cfg.model, j_tr, mask, method=cfg.state_method)
+    st_tr = generate_states(cfg.model, j_tr, mask, method=cfg.state_method,
+                            block_s=cfg.kernel_block_s)
     st_te = generate_states(cfg.model, j_te, mask, s0=st_tr[:, -1, :],
-                            method=cfg.state_method)
+                            method=cfg.state_method, block_s=cfg.kernel_block_s)
     st_tr = maybe_shard(st_tr, ("pod", "data"))
     st_te = maybe_shard(st_te, ("pod", "data"))
 
@@ -161,22 +192,27 @@ def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg):
                                   st_fit.dtype)
         st_fit = st_fit + sigma * noise
 
-    fit = functools.partial(fit_ridge, lambdas=cfg.ridge_l2,
-                            use_kernel=cfg.readout_use_kernel)
-    if cfg.readout_use_kernel:
-        # pallas_call has no batching rule on all jax versions -> sequential
-        # map over instances (the kernel itself parallelises the stream).
-        w_fit, lam_idx = jax.lax.map(lambda xy: fit(xy[0], xy[1]), (st_fit, y_fit))
-    else:
-        w_fit, lam_idx = jax.vmap(fit)(st_fit, y_fit)
+    # Kernel path: ONE batch-gridded pallas_call over the instance stack
+    # (ridge.fit_ridge_batched); jnp path: vmapped SVD solve.
+    w_fit, lam_idx = fit_ridge_batched(
+        st_fit, y_fit, lambdas=cfg.ridge_l2,
+        use_kernel=cfg.readout_use_kernel, block_t=cfg.readout_block_t)
 
     # -- evaluation -----------------------------------------------------------
-    y_raw = jax.vmap(apply_readout)(st_te, w_fit)      # [B, T_test]
+    y_raw = jax.vmap(apply_readout)(st_te, w_fit)      # [B, T_test(, C)]
     y_sym = _quantize(y_raw)
+    inst_axes = tuple(range(1, y_raw.ndim))            # all but the batch axis
     err = y_raw - te_tg
-    var = jnp.var(te_tg, axis=1)
-    nrmse = jnp.sqrt(jnp.mean(err * err, axis=1) / (var + 1e-30))
-    ser = jnp.mean((y_sym != te_tg).astype(jnp.float32), axis=1)
+    # NRMSE per channel (normalised by that channel's variance, reduced over
+    # T only), then channel-mean — a pooled T×C reduction would let a
+    # high-variance channel mask total failure on a low-variance one.
+    var = jnp.var(te_tg, axis=1)                       # [B(, C)]
+    nrmse_ch = jnp.sqrt(jnp.mean(err * err, axis=1) / (var + 1e-30))
+    nrmse = nrmse_ch if nrmse_ch.ndim == 1 else jnp.mean(nrmse_ch, axis=-1)
+    # SER on quantized-vs-quantized symbols: targets that round-tripped
+    # through a wider dtype (f64 task gen -> f32 canon) may sit eps off the
+    # nominal 4-PAM levels; raw float equality would count those as errors.
+    ser = jnp.mean((y_sym != _quantize(te_tg)).astype(jnp.float32), axis=inst_axes)
     lam = jnp.asarray(cfg.ridge_l2, jnp.float32)[lam_idx]
     y_out = y_sym if cfg.quantize else y_raw
     return y_out, nrmse, ser, lam, w_fit
@@ -201,24 +237,30 @@ class Experiment:
     def run(self, inputs_train, targets_train, inputs_test, targets_test) -> ExperimentResult:
         """Fit readouts and evaluate, one task instance per batch row.
 
-        Every array is [B, T] (or [T], treated as B = 1).  Train/test lengths
-        may differ; all instances in a batch share shapes (stack equal-length
-        series; pad/trim upstream otherwise).
+        Inputs are [B, T] (or [T], treated as B = 1); targets may carry a
+        trailing channel axis ([B, T, C]) for multi-output readouts.
+        Train/test lengths may differ; all instances in a batch share shapes
+        (stack equal-length series; pad/trim upstream otherwise).
         """
         tr_in = _canon_batch(inputs_train, "inputs_train")
-        tr_tg = _canon_batch(targets_train, "targets_train")
         te_in = _canon_batch(inputs_test, "inputs_test")
-        te_tg = _canon_batch(targets_test, "targets_test")
-        if not (tr_in.shape == tr_tg.shape and te_in.shape == te_tg.shape
-                and tr_in.shape[0] == te_in.shape[0]):
+        tr_tg = _canon_targets(targets_train, "targets_train", tr_in)
+        te_tg = _canon_targets(targets_test, "targets_test", te_in)
+        if tr_in.shape[0] != te_in.shape[0] or tr_tg.ndim != te_tg.ndim or (
+                tr_tg.ndim == 3 and tr_tg.shape[-1] != te_tg.shape[-1]):
             raise ValueError(
                 f"inconsistent batch shapes: train {tr_in.shape}/{tr_tg.shape}, "
                 f"test {te_in.shape}/{te_tg.shape}")
         y, nrmse, ser, lam, w = _run_pipeline(
             self.config, self.mask, tr_in, tr_tg, te_in, te_tg)
+        # w is [B, N + 1, C]; drop the channel axis only when there is a
+        # single output channel (C > 1 used to be silently truncated here).
+        w = np.asarray(w)
+        if w.shape[-1] == 1:
+            w = w[..., 0]
         return ExperimentResult(
             y_pred=np.asarray(y), nrmse=np.asarray(nrmse), ser=np.asarray(ser),
-            lam=np.asarray(lam), readout_w=np.asarray(w[..., 0]))
+            lam=np.asarray(lam), readout_w=w)
 
     def run_dataset(self, ds) -> ExperimentResult:
         """Convenience for a core.tasks Dataset (single instance, B = 1)."""
@@ -236,7 +278,17 @@ def channel_states(model: NLModel, j: jnp.ndarray, masks: jnp.ndarray, *,
     across calls (train -> test).  One vmapped program evaluates all R
     channels in parallel — the software analogue of R wavelengths sharing
     the physical ring.
+
+    ``method="kernel"`` is rejected: the Pallas scan shares ONE mask across
+    all batch lanes (mask is a [N, 1] broadcast in VMEM), so per-channel
+    masks can't ride its batch tiling, and vmapping the ``pallas_call``
+    would serialise R launches at best.  Use "fast"/"ref" here.
     """
+    if method == "kernel":
+        raise ValueError(
+            "channel_states does not support method='kernel': per-channel "
+            "masks cannot share the Pallas scan's single-mask batch tiling; "
+            "use method='fast' or 'ref'")
     j = jnp.asarray(j, jnp.float32)
     masks = jnp.asarray(masks, j.dtype)
     if j.shape[0] != masks.shape[0]:

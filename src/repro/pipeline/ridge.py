@@ -24,6 +24,8 @@ a function of (G, c, y2, T) only.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -156,6 +158,39 @@ def fit_ridge(
         y2 = jnp.sum(y.astype(jnp.float32) ** 2)
         return solve_gcv(g, c, y2, x.shape[0], tuple(lambdas))
     return solve_gcv_svd(x, y, tuple(lambdas))
+
+
+def fit_ridge_batched(
+    states: jnp.ndarray,   # [B, T, N]
+    targets: jnp.ndarray,  # [B, T] or [B, T, C]
+    *,
+    lambdas: tuple[float, ...] = (1e-6,),
+    use_kernel: bool = False,
+    block_t: int = 512,
+):
+    """Batched readout fit: B instance fits -> (w [B, N + 1, C], lam_idx [B]).
+
+    The default (SVD) path is just ``vmap(fit_ridge)``.  ``use_kernel=True``
+    runs ONE batch-gridded Pallas ``gram_accumulate_batched`` launch over the
+    whole instance stack (the kernel has no jax batching rule, so a naive
+    vmap/``lax.map`` would serialise B launches) and vmaps the eigh/GCV solve
+    over the resulting [B, F, F] Gram stack.  ``block_t`` sizes the kernel's
+    T tile (sublane-aligned internally).
+    """
+    y = targets[..., None] if targets.ndim == 2 else targets
+    lams = tuple(lambdas)
+    if use_kernel:
+        from repro.kernels.ridge_gram import ops as gram_ops
+
+        x = with_bias(states)
+        g, c = gram_ops.gram_accumulate_batched(x, y.astype(x.dtype),
+                                                block_t=block_t)
+        y32 = y.astype(jnp.float32)
+        y2 = jnp.sum(y32 * y32, axis=(1, 2))
+        n_samples = x.shape[1]
+        return jax.vmap(lambda gb, cb, y2b: solve_gcv(gb, cb, y2b, n_samples, lams))(
+            g, c, y2)
+    return jax.vmap(functools.partial(fit_ridge, lambdas=lams))(states, y)
 
 
 def apply_readout(states: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:

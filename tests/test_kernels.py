@@ -7,8 +7,10 @@ import numpy as np
 import pytest
 
 from repro.core import MZISine, MackeyGlass, SiliconMR, make_mask
-from repro.kernels.dfr_scan import dfr_scan, dfr_scan_ref
-from repro.kernels.ridge_gram import gram_accumulate, gram_ref
+from repro.kernels.dfr_scan import auto_block_s, dfr_scan, dfr_scan_ref, padded_lanes
+from repro.kernels.ridge_gram import (effective_block_t, gram_accumulate,
+                                      gram_accumulate_batched, gram_ref,
+                                      gram_ref_batched)
 
 MODELS = [SiliconMR(), SiliconMR(beta_tpa=0.7), MackeyGlass(), MZISine()]
 
@@ -77,3 +79,91 @@ def test_gram_1d_targets():
     y = jnp.asarray(rng.standard_normal((50,)), jnp.float32)
     g, mom = gram_accumulate(x, y)
     assert g.shape == (20, 20) and mom.shape == (20, 1)
+
+
+@pytest.mark.parametrize("t", [1, 7, 100, 257, 512, 513])
+def test_effective_block_t_sublane_aligned(t):
+    """Regression: min(block_t, max(8, t)) used to yield non-multiple-of-8
+    tiles (T=100 -> a (100, 128) block), which fails TPU f32 tiling.  The
+    effective tile must be a multiple of 8 and at most one tile of padding."""
+    eff = effective_block_t(t)
+    assert eff % 8 == 0
+    assert 8 <= eff <= 512
+    assert eff <= max(8, -(-t // 8) * 8)  # never bigger than the aligned stream
+
+
+@pytest.mark.parametrize("t", [100, 257])
+def test_gram_odd_t_matches_oracle(t):
+    """Odd (non-multiple-of-8) T through the aligned-tile padding path."""
+    rng = np.random.default_rng(t)
+    x = jnp.asarray(rng.standard_normal((t, 37)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((t, 1)), jnp.float32)
+    g, mom = gram_accumulate(x, y, interpret=True)
+    gr, mr = gram_ref(x, y)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mom), np.asarray(mr), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,t,f,c", [(1, 100, 37, 1), (4, 257, 150, 2), (8, 64, 129, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_batched_matches_oracle(b, t, f, c, dtype):
+    """The batch-gridded kernel: B instances in ONE launch, no lane mixing."""
+    rng = np.random.default_rng(b * 1000 + t + f + c)
+    x = jnp.asarray(rng.standard_normal((b, t, f)), dtype)
+    y = jnp.asarray(rng.standard_normal((b, t, c)), dtype)
+    g, mom = gram_accumulate_batched(x, y)
+    gr, mr = gram_ref_batched(x, y)
+    assert g.shape == (b, f, f) and mom.shape == (b, f, c)
+    scale_g = max(1e-9, float(jnp.max(jnp.abs(gr))))
+    scale_c = max(1e-9, float(jnp.max(jnp.abs(mr))))
+    assert float(jnp.max(jnp.abs(g - gr))) / scale_g < 1e-5
+    assert float(jnp.max(jnp.abs(mom - mr))) / scale_c < 1e-5
+
+
+def test_gram_batched_matches_per_instance_calls():
+    """Batched launch == stack of single-instance launches, bit-for-bit."""
+    rng = np.random.default_rng(21)
+    x = jnp.asarray(rng.standard_normal((3, 90, 33)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((3, 90)), jnp.float32)
+    g_b, c_b = gram_accumulate_batched(x, y)
+    for i in range(3):
+        g_i, c_i = gram_accumulate(x[i], y[i])
+        np.testing.assert_array_equal(np.asarray(g_b[i]), np.asarray(g_i))
+        np.testing.assert_array_equal(np.asarray(c_b[i]), np.asarray(c_i))
+
+
+def test_auto_block_s_heuristic():
+    """Smallest sublane tile in {1, 2, 4, 8} covering the batch."""
+    assert auto_block_s(1) == 1
+    assert auto_block_s(8) == 1
+    assert auto_block_s(128) == 1
+    assert auto_block_s(129) == 2
+    assert auto_block_s(256) == 2
+    assert auto_block_s(257) == 4
+    assert auto_block_s(512) == 4
+    assert auto_block_s(513) == 8
+    assert auto_block_s(5000) == 8
+    # the B = 8 sweep from the issue: 128 lanes, not 1024
+    assert padded_lanes(8) == 128
+    assert padded_lanes(8, 8) == 1024
+
+
+@pytest.mark.parametrize("b", [3, 130, 300])
+def test_dfr_scan_auto_tile_matches_oracle(b):
+    """block_s=None picks the auto tile; results match the oracle exactly."""
+    model = SiliconMR()
+    rng = np.random.default_rng(b)
+    j = jnp.asarray(rng.uniform(0, 1, (b, 5)), jnp.float32)
+    mask = make_mask(7, seed=2)
+    s0 = jnp.asarray(rng.uniform(0, 0.3, (b, 7)), jnp.float32)
+    out = dfr_scan(model, j, mask, s0)
+    ref = dfr_scan_ref(model, j, mask, s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+def test_dfr_scan_rejects_bad_block_s():
+    model = SiliconMR()
+    j = jnp.zeros((4, 3), jnp.float32)
+    mask = make_mask(5, seed=1)
+    with pytest.raises(ValueError, match="block_s"):
+        dfr_scan(model, j, mask, jnp.zeros((4, 5), jnp.float32), block_s=3)
