@@ -8,9 +8,30 @@ points) in a single call instead of a per-config Python loop.
 
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.pipeline import Experiment, ExperimentConfig
+
+
+def stack_datasets(datasets):
+    """Equal-shape core.tasks Datasets -> (tr_in, tr_tg, te_in, te_tg) stacks
+    with the instance axis leading (the pipeline's vmapped batch axis)."""
+    return tuple(np.stack([getattr(d, f) for d in datasets])
+                 for f in ("inputs_train", "targets_train",
+                           "inputs_test", "targets_test"))
+
+
+def time_fn(fn, *args, iters: int = 3) -> float:
+    """Mean wall microseconds per call, first (compile) call excluded."""
+    import jax
+
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
 
 
 def experiment_for(cfg) -> Experiment:
@@ -39,11 +60,7 @@ def fit_and_eval_batch(cfg, datasets, metric: str) -> np.ndarray:
     All B instances (different seeds / SNRs / task draws) run in ONE jit
     call, vmapped inside the pipeline.
     """
-    tr_in = np.stack([d.inputs_train for d in datasets])
-    tr_tg = np.stack([d.targets_train for d in datasets])
-    te_in = np.stack([d.inputs_test for d in datasets])
-    te_tg = np.stack([d.targets_test for d in datasets])
-    return _metric(experiment_for(cfg).run(tr_in, tr_tg, te_in, te_tg), metric)
+    return _metric(experiment_for(cfg).run(*stack_datasets(datasets)), metric)
 
 
 def csv_row(name: str, value, derived: str = "") -> str:

@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -35,17 +34,9 @@ from repro.core import SiliconMR, make_mask
 from repro.kernels.dfr_scan import auto_block_s, dfr_scan, padded_lanes
 from repro.kernels.ridge_gram import gram_accumulate, gram_accumulate_batched
 
-from .common import csv_row
+from .common import csv_row, time_fn
 
 BATCHES = (1, 8, 64, 512)
-
-
-def _time(fn, *args, iters: int = 3) -> float:
-    jax.block_until_ready(fn(*args))  # compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
 
 
 def reservoir_section(*, k: int, n: int, iters: int) -> list[dict]:
@@ -58,7 +49,7 @@ def reservoir_section(*, k: int, n: int, iters: int) -> list[dict]:
         s0 = jnp.zeros((b, n), jnp.float32)
         for tiling, block_s in (("fixed8", 8), ("auto", auto_block_s(b))):
             lanes = padded_lanes(b, block_s)
-            us = _time(lambda jj, ss, bs=block_s: dfr_scan(model, jj, mask, ss, block_s=bs),
+            us = time_fn(lambda jj, ss, bs=block_s: dfr_scan(model, jj, mask, ss, block_s=bs),
                        j, s0, iters=iters)
             entries.append({
                 "batch": b,
@@ -88,7 +79,7 @@ def readout_section(*, t: int, f: int, iters: int) -> list[dict]:
             entries.append({
                 "batch": b,
                 "path": path,
-                "wall_us": round(_time(fn, x, y, iters=iters), 1),
+                "wall_us": round(time_fn(fn, x, y, iters=iters), 1),
             })
     return entries
 

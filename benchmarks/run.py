@@ -14,11 +14,12 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list of fig5,fig6,fig7,table1,kernels,kernel_batching,roofline")
+                    help="comma list of fig5,fig6,fig7,table1,kernels,"
+                         "kernel_batching,streaming_fusion,roofline")
     args = ap.parse_args()
 
     from . import (fig5_nrmse, fig6_ser, fig7_training_time, kernel_batching,
-                   kernel_bench, roofline, table1_power)
+                   kernel_bench, roofline, streaming_fusion, table1_power)
 
     sections = {
         "fig5": fig5_nrmse.run,
@@ -27,6 +28,7 @@ def main() -> None:
         "table1": table1_power.run,
         "kernels": kernel_bench.run,
         "kernel_batching": kernel_batching.run,
+        "streaming_fusion": streaming_fusion.run,
         "roofline": roofline.run,
     }
     chosen = args.only.split(",") if args.only else list(sections)

@@ -85,13 +85,21 @@ def generate_states(
     s0: jnp.ndarray | None = None,
     method: str = "fast",
     block_s: int | None = None,
-) -> jnp.ndarray:
+    return_final: bool = False,
+):
     """DFR states for sample series ``j`` [..., K] -> [..., K, N].
 
     ``method``: "fast" (default), "ref" (sequential oracle) or "kernel"
     (Pallas; interpret-mode on CPU).  ``block_s`` sizes the kernel's sublane
     tile (None = smallest of {1, 2, 4, 8} covering the batch — see
     kernels/dfr_scan/ops.py); ignored by the jnp paths.
+
+    ``return_final=True`` additionally returns the final reservoir state
+    [..., N] — feed it back as ``s0`` to resume the scan (train -> test
+    continuation; chunked streaming over K).  On the kernel path this is the
+    kernel's explicit VMEM-carry output rather than a slice of the state
+    tensor, so a chunked caller never has to keep the full [..., K, N] block
+    alive just to continue from its last period.
     """
     jb, squeeze = _canon(j)
     n_nodes = int(mask.shape[-1])
@@ -105,7 +113,9 @@ def generate_states(
     if method == "kernel":
         from repro.kernels.dfr_scan import ops as dfr_ops
 
-        states = dfr_ops.dfr_scan(model, jb, mask, s0b, block_s=block_s)
+        out = dfr_ops.dfr_scan(model, jb, mask, s0b, block_s=block_s,
+                               return_final=return_final)
+        states, s_final = out if return_final else (out, None)
     else:
         u = masked_input(jb, mask)
         if method == "ref":
@@ -114,4 +124,7 @@ def generate_states(
             states = _states_fast(model, u, s0b)
         else:
             raise ValueError(f"unknown method {method!r}")
-    return states[0] if squeeze else states
+        s_final = states[:, -1, :] if return_final else None
+    if squeeze:
+        return (states[0], s_final[0]) if return_final else states[0]
+    return (states, s_final) if return_final else states

@@ -15,9 +15,21 @@ s(t−τ) across periods of the same batch tile.
   grid = (B_tiles, K)
   j       [K, B_s, B_l]          block [1, S, L]    @ (k, b·S, 0)
   mask    [N, 1]                 block [N, 1]       (whole, every step)
+       or [N, B_s, B_l]          block [N, S, L]    @ (0, b·S, 0)  (per-lane)
   s0      [N, B_s, B_l]          block [N, S, L]    @ (0, b·S, 0)
   out     [K, N, B_s, B_l]       block [1, N, S, L] @ (k, 0, b·S, 0)
+  fin     [N, B_s, B_l]          block [N, S, L]    @ (0, b·S, 0)
   scratch s_prev [N, S, L] f32, s_last [S, L] f32
+
+Two outputs: the per-period states AND the final reservoir state (the VMEM
+``s_prev`` carry, flushed on the last period of each batch tile).  The final
+state is what a *chunked* caller feeds back as ``s0`` of the next K-chunk —
+for f32 I/O the resume is bit-exact, because the flush stores exactly the
+f32 scratch values the uninterrupted scan would have kept in VMEM (DESIGN.md
+§8).  The mask is either one [N, 1] vector broadcast across all batch lanes
+(the paper's single-accelerator sweep — every lane shares the MLS mask) or a
+per-lane [N, S, L] tile (WDM ensembles: each batch lane is a wavelength
+channel with its own mask; pipeline/experiment.channel_states).
 
 The node chain (θ coupling) is sequential by construction — the realised
 branch bit of node i−1 feeds the value of node i (nonlinear.py docstring) —
@@ -41,8 +53,10 @@ from jax.experimental.pallas import tpu as pltpu
 LANES = 128
 
 
-def _kernel(model, n_nodes, j_ref, mask_ref, s0_ref, out_ref, s_prev_ref, s_last_ref):
+def _kernel(model, n_nodes, per_lane,
+            j_ref, mask_ref, s0_ref, out_ref, fin_ref, s_prev_ref, s_last_ref):
     k = pl.program_id(1)
+    n_k = pl.num_programs(1)
 
     # First period of this batch tile: load the initial reservoir state.
     @pl.when(k == 0)
@@ -53,7 +67,11 @@ def _kernel(model, n_nodes, j_ref, mask_ref, s0_ref, out_ref, s_prev_ref, s_last
     j_k = j_ref[0, :, :].astype(jnp.float32)  # [S, L] — this period's sample
 
     def node(i, s_last):
-        u_i = j_k * mask_ref[i, 0]                      # input layer: u = j·m
+        if per_lane:
+            m_i = mask_ref[i, :, :].astype(jnp.float32)     # [S, L] tile
+        else:
+            m_i = mask_ref[i, 0]                            # lane-broadcast
+        u_i = j_k * m_i                                 # input layer: u = j·m
         s_tau_i = s_prev_ref[i, :, :]                   # s(t−τ): same node, prev period
         s_i = model.node_update(u_i, s_tau_i, s_last)   # NL node (θ-chain via s_last)
         s_prev_ref[i, :, :] = s_i                       # becomes s(t−τ) for period k+1
@@ -63,34 +81,52 @@ def _kernel(model, n_nodes, j_ref, mask_ref, s0_ref, out_ref, s_prev_ref, s_last
     s_last = jax.lax.fori_loop(0, n_nodes, node, s_last_ref[...])
     s_last_ref[...] = s_last
 
+    # Last period: flush the VMEM state carry — the resume point for the
+    # next K-chunk (and the pipeline's train -> test continuation).
+    @pl.when(k == n_k - 1)
+    def _fin():
+        fin_ref[...] = s_prev_ref[...].astype(fin_ref.dtype)
+
 
 @functools.partial(jax.jit, static_argnames=("model", "block_s", "interpret"))
 def dfr_scan_tiled(
     model,
     j: jnp.ndarray,      # [K, S_total, L]
-    mask: jnp.ndarray,   # [N, 1]
+    mask: jnp.ndarray,   # [N, 1] (broadcast) or [N, S_total, L] (per-lane)
     s0: jnp.ndarray,     # [N, S_total, L]
     *,
     block_s: int = 8,
     interpret: bool = False,
-) -> jnp.ndarray:        # [K, N, S_total, L]
+) -> tuple[jnp.ndarray, jnp.ndarray]:  # ([K, N, S_total, L], [N, S_total, L])
     k_periods, s_total, lanes = j.shape
     n_nodes = mask.shape[0]
     if s_total % block_s:
         raise ValueError(f"S_total {s_total} not divisible by block_s {block_s}")
+    per_lane = mask.ndim == 3
     grid = (s_total // block_s, k_periods)
 
-    kernel = functools.partial(_kernel, model, n_nodes)
+    if per_lane:
+        mask_spec = pl.BlockSpec((n_nodes, block_s, lanes), lambda b, k: (0, b, 0))
+    else:
+        mask_spec = pl.BlockSpec((n_nodes, 1), lambda b, k: (0, 0))
+
+    kernel = functools.partial(_kernel, model, n_nodes, per_lane)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_s, lanes), lambda b, k: (k, b, 0)),
-            pl.BlockSpec((n_nodes, 1), lambda b, k: (0, 0)),
+            mask_spec,
             pl.BlockSpec((n_nodes, block_s, lanes), lambda b, k: (0, b, 0)),
         ],
-        out_specs=pl.BlockSpec((1, n_nodes, block_s, lanes), lambda b, k: (k, 0, b, 0)),
-        out_shape=jax.ShapeDtypeStruct((k_periods, n_nodes, s_total, lanes), j.dtype),
+        out_specs=[
+            pl.BlockSpec((1, n_nodes, block_s, lanes), lambda b, k: (k, 0, b, 0)),
+            pl.BlockSpec((n_nodes, block_s, lanes), lambda b, k: (0, b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k_periods, n_nodes, s_total, lanes), j.dtype),
+            jax.ShapeDtypeStruct((n_nodes, s_total, lanes), j.dtype),
+        ],
         scratch_shapes=[
             pltpu.VMEM((n_nodes, block_s, lanes), jnp.float32),
             pltpu.VMEM((block_s, lanes), jnp.float32),

@@ -10,6 +10,13 @@ smallest tile in {1, 2, 4, 8} that covers the batch, so small sweeps don't
 pay for lanes they never use: a fixed block_s = 8 pads every batch to a
 multiple of 1024 lanes (a B = 8 sweep would run 128× wasted reservoir work),
 whereas auto-tiling pads B ≤ 128 to one 128-lane vreg row.
+
+``mask`` is [N] (one mask broadcast across every batch lane — the paper's
+sweep) or [B, N] (a mask per lane — WDM ensembles, where each lane is a
+wavelength channel).  ``return_final=True`` additionally returns the final
+reservoir state [B, N] straight from the kernel's VMEM carry: feeding it
+back as ``s0`` of a following call resumes the scan bit-exactly for f32 I/O
+(chunked streaming, train -> test continuation; DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -47,17 +54,22 @@ def padded_lanes(batch: int, block_s: int | None = None) -> int:
 def dfr_scan(
     model,
     j: jnp.ndarray,      # [B, K]
-    mask: jnp.ndarray,   # [N]
+    mask: jnp.ndarray,   # [N] (broadcast) or [B, N] (per-lane)
     s0: jnp.ndarray,     # [B, N]
     *,
     block_s: int | None = None,
     interpret: bool | None = None,
-) -> jnp.ndarray:        # [B, K, N]
+    return_final: bool = False,
+):
+    """States [B, K, N]; with ``return_final`` also the final state [B, N]."""
     if interpret is None:
         interpret = _auto_interpret()
     j = jnp.asarray(j)
     b, k_periods = j.shape
+    mask = jnp.asarray(mask, j.dtype)
     n_nodes = int(mask.shape[-1])
+    if mask.ndim == 2 and mask.shape[0] != b:
+        raise ValueError(f"per-lane mask batch {mask.shape[0]} != j batch {b}")
     if block_s is None:
         block_s = auto_block_s(b)
     elif block_s not in _BLOCK_S_CHOICES:
@@ -72,9 +84,17 @@ def dfr_scan(
     # [B, K] -> [K, S, L];  [B, N] -> [N, S, L]
     jt = jp.T.reshape(k_periods, s_total, LANES)
     s0t = s0p.T.reshape(n_nodes, s_total, LANES)
-    maskt = jnp.asarray(mask, j.dtype).reshape(n_nodes, 1)
+    if mask.ndim == 2:
+        maskt = jnp.pad(mask, ((0, b_pad), (0, 0))).T.reshape(n_nodes, s_total, LANES)
+    else:
+        maskt = mask.reshape(n_nodes, 1)
 
-    out = dfr_scan_tiled(model, jt, maskt, s0t, block_s=block_s, interpret=interpret)
-    # [K, N, S, L] -> [B, K, N]
+    out, fin = dfr_scan_tiled(model, jt, maskt, s0t, block_s=block_s,
+                              interpret=interpret)
+    # [K, N, S, L] -> [B, K, N];  [N, S, L] -> [B, N]
     out = out.reshape(k_periods, n_nodes, s_total * LANES)
-    return jnp.moveaxis(out, -1, 0)[:b]
+    states = jnp.moveaxis(out, -1, 0)[:b]
+    if not return_final:
+        return states
+    s_final = fin.reshape(n_nodes, s_total * LANES).T[:b]
+    return states, s_final

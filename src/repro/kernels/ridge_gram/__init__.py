@@ -1,11 +1,13 @@
 from . import ops, ref
-from .ops import effective_block_t, gram_accumulate, gram_accumulate_batched
+from .ops import (effective_block_t, gram_accumulate, gram_accumulate_batched,
+                  gram_accumulate_batched_into)
 from .ref import gram_ref, gram_ref_batched
 
 __all__ = [
     "effective_block_t",
     "gram_accumulate",
     "gram_accumulate_batched",
+    "gram_accumulate_batched_into",
     "gram_ref",
     "gram_ref_batched",
     "ops",

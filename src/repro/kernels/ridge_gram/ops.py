@@ -6,7 +6,9 @@ and strips the padding from the outputs.  Interpret mode off-TPU.
 ``gram_accumulate`` is the single-instance [T, F] API;
 ``gram_accumulate_batched`` runs a whole [B, T, F] instance stack as ONE
 kernel launch with a leading batch grid dimension — the batched readout fit
-in pipeline/ridge.py uses it to avoid a sequential per-instance loop.
+in pipeline/ridge.py uses it to avoid a sequential per-instance loop;
+``gram_accumulate_batched_into`` folds one stream chunk into running
+(G, c) stacks in place (the streaming fit's per-chunk update, DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -14,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .ridge_gram import gram_tiled, gram_tiled_batched
+from .ridge_gram import gram_tiled, gram_tiled_batched, gram_tiled_batched_into
 
 
 def _auto_interpret() -> bool:
@@ -88,4 +90,54 @@ def gram_accumulate_batched(
     yp = jnp.pad(y.astype(x.dtype), ((0, 0), (0, t_pad), (0, 0)))
     g, c = gram_tiled_batched(xp, yp, block_t=block_t, block_f=block_f,
                               interpret=interpret)
+    return g[:, :f, :f], c[:, :f]
+
+
+def gram_accumulate_batched_into(
+    g0: jnp.ndarray,  # [B, F, F] f32 (running Gram; donated to the output)
+    c0: jnp.ndarray,  # [B, F, C] f32 (running moment)
+    x: jnp.ndarray,   # [B, T, F]
+    y: jnp.ndarray,   # [B, T] or [B, T, C]
+    *,
+    block_t: int = 512,
+    block_f: int = 128,
+    interpret: bool | None = None,
+):
+    """(G0 + XᵀX, c0 + XᵀY) per instance, one in-place kernel launch.
+
+    Chunked accumulation is bit-identical to a one-shot ``gram_accumulate_
+    batched`` over the concatenated stream whenever every chunk's T is a
+    multiple of the effective T tile (the kernel seeds its VMEM accumulator
+    from the running value, so the f32 additions happen in the same order).
+
+    F padding note: when F is not a multiple of ``block_f`` the init/output
+    stacks are padded and re-sliced per call, which copies G.  Streaming
+    callers that fold many chunks should carry the *padded* [B, Fp, Fp]
+    stacks and call ``gram_tiled_batched_into`` directly (see
+    pipeline/ridge.fit_ridge_streaming), stripping the padding once at the
+    end.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    if y.ndim == 2:
+        y = y[..., None]
+    if x.ndim != 3 or y.ndim != 3 or y.shape[:2] != x.shape[:2]:
+        raise ValueError(f"expected x [B, T, F] with y [B, T(, C)], got "
+                         f"{x.shape} / {y.shape}")
+    b, t, f = x.shape
+    c_cols = y.shape[-1]
+    if g0.shape != (b, f, f) or c0.shape != (b, f, c_cols):
+        raise ValueError(f"init stacks {g0.shape} / {c0.shape} do not match "
+                         f"x {x.shape} / y {y.shape}")
+    block_t = effective_block_t(t, block_t)
+    t_pad = -t % block_t
+    f_pad = -f % block_f
+    xp = jnp.pad(x, ((0, 0), (0, t_pad), (0, f_pad)))
+    yp = jnp.pad(y.astype(x.dtype), ((0, 0), (0, t_pad), (0, 0)))
+    g0p = jnp.pad(jnp.asarray(g0, jnp.float32), ((0, 0), (0, f_pad), (0, f_pad)))
+    c0p = jnp.pad(jnp.asarray(c0, jnp.float32), ((0, 0), (0, f_pad), (0, 0)))
+    g, c = gram_tiled_batched_into(g0p, c0p, xp, yp, block_t=block_t,
+                                   block_f=block_f, interpret=interpret)
     return g[:, :f, :f], c[:, :f]

@@ -23,6 +23,17 @@ Accumulators live in VMEM scratch in f32 (MXU partials in f32 via
 (b, i, j) tile — the t == 0 re-zero makes the scratch per-instance, so batch
 lanes never mix.  bf16/f32 inputs give identical G up to f32 accumulation
 order.  The B = 1 wrapper ``gram_tiled`` serves the single-instance API.
+
+``gram_tiled_batched_into`` is the *accumulate-into* variant (DESIGN.md §8):
+two extra inputs carry running (G₀, c₀) stacks, aliased onto the outputs
+(``input_output_aliases`` — the update is in-place in HBM), and the t == 0
+step loads the VMEM scratch from them instead of zeroing.  Because each
+chunk's partial products are added onto the running accumulator in exactly
+the order an uninterrupted pass would use, folding a T-stream chunk-by-chunk
+reproduces the one-shot result bit-for-bit whenever the chunk length is a
+multiple of the T tile.  This is what lets a streaming caller fold
+per-chunk state blocks into a running [B, F, F]/[B, F, C] Gram stack without
+the full [B, T, F] state matrix ever existing.
 """
 
 from __future__ import annotations
@@ -35,15 +46,26 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(n_t_tiles, xl_ref, xr_ref, y_ref, g_ref, c_ref, g_acc, c_acc):
+def _kernel(n_t_tiles, has_init, *refs):
+    if has_init:
+        g0_ref, c0_ref, xl_ref, xr_ref, y_ref, g_ref, c_ref, g_acc, c_acc = refs
+    else:
+        xl_ref, xr_ref, y_ref, g_ref, c_ref, g_acc, c_acc = refs
+        g0_ref = c0_ref = None
     t = pl.program_id(3)
     j = pl.program_id(2)
 
-    # First T step of this (b, i, j) tile: reset the per-instance accumulator.
+    # First T step of this (b, i, j) tile: seed the per-instance accumulator —
+    # zeros for the one-shot kernel, the running G₀/c₀ block when folding a
+    # chunk into a carried accumulator.
     @pl.when(t == 0)
-    def _zero():
-        g_acc[...] = jnp.zeros_like(g_acc)
-        c_acc[...] = jnp.zeros_like(c_acc)
+    def _seed():
+        if has_init:
+            g_acc[...] = g0_ref[0]
+            c_acc[...] = c0_ref[0]
+        else:
+            g_acc[...] = jnp.zeros_like(g_acc)
+            c_acc[...] = jnp.zeros_like(c_acc)
 
     xl = xl_ref[0]
     g_acc[...] += jax.lax.dot_general(
@@ -71,6 +93,23 @@ def _kernel(n_t_tiles, xl_ref, xr_ref, y_ref, g_ref, c_ref, g_acc, c_acc):
         c_ref[0] = c_acc[...]
 
 
+def _specs(block_t, block_f, c_cols):
+    in_specs = [
+        pl.BlockSpec((1, block_t, block_f), lambda b, i, j, t: (b, t, i)),
+        pl.BlockSpec((1, block_t, block_f), lambda b, i, j, t: (b, t, j)),
+        pl.BlockSpec((1, block_t, c_cols), lambda b, i, j, t: (b, t, 0)),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, block_f, block_f), lambda b, i, j, t: (b, i, j)),
+        pl.BlockSpec((1, block_f, c_cols), lambda b, i, j, t: (b, i, 0)),
+    ]
+    scratch = [
+        pltpu.VMEM((block_f, block_f), jnp.float32),
+        pltpu.VMEM((block_f, c_cols), jnp.float32),
+    ]
+    return in_specs, out_specs, scratch
+
+
 @functools.partial(jax.jit, static_argnames=("block_t", "block_f", "interpret"))
 def gram_tiled_batched(
     x: jnp.ndarray,  # [B, T, F], T % block_t == 0, F % block_f == 0
@@ -83,30 +122,63 @@ def gram_tiled_batched(
     batch, t_total, f_total = x.shape
     c_cols = y.shape[-1]
     grid = (batch, f_total // block_f, f_total // block_f, t_total // block_t)
+    in_specs, out_specs, scratch = _specs(block_t, block_f, c_cols)
 
-    kernel = functools.partial(_kernel, grid[3])
+    kernel = functools.partial(_kernel, grid[3], False)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_t, block_f), lambda b, i, j, t: (b, t, i)),
-            pl.BlockSpec((1, block_t, block_f), lambda b, i, j, t: (b, t, j)),
-            pl.BlockSpec((1, block_t, c_cols), lambda b, i, j, t: (b, t, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, block_f, block_f), lambda b, i, j, t: (b, i, j)),
-            pl.BlockSpec((1, block_f, c_cols), lambda b, i, j, t: (b, i, 0)),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
         out_shape=[
             jax.ShapeDtypeStruct((batch, f_total, f_total), jnp.float32),
             jax.ShapeDtypeStruct((batch, f_total, c_cols), jnp.float32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((block_f, block_f), jnp.float32),
-            pltpu.VMEM((block_f, c_cols), jnp.float32),
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(x, x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f", "interpret"))
+def gram_tiled_batched_into(
+    g0: jnp.ndarray,  # [B, F, F] f32 — running Gram stack (donated)
+    c0: jnp.ndarray,  # [B, F, C] f32 — running moment stack (donated)
+    x: jnp.ndarray,   # [B, T, F], T % block_t == 0, F % block_f == 0
+    y: jnp.ndarray,   # [B, T, C]
+    *,
+    block_t: int = 512,
+    block_f: int = 128,
+    interpret: bool = False,
+):
+    """(G₀ + XᵀX, c₀ + XᵀY): fold one stream chunk into the running stats.
+
+    The init stacks alias the outputs (in-place HBM update); each (b, i, j)
+    tile reads its init block once (t == 0) before overwriting it on its
+    last T step, so the aliasing is race-free under the sequential-T grid.
+    """
+    batch, t_total, f_total = x.shape
+    c_cols = y.shape[-1]
+    grid = (batch, f_total // block_f, f_total // block_f, t_total // block_t)
+    in_specs, out_specs, scratch = _specs(block_t, block_f, c_cols)
+    init_specs = [
+        pl.BlockSpec((1, block_f, block_f), lambda b, i, j, t: (b, i, j)),
+        pl.BlockSpec((1, block_f, c_cols), lambda b, i, j, t: (b, i, 0)),
+    ]
+
+    kernel = functools.partial(_kernel, grid[3], True)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=init_specs + in_specs,
+        out_specs=out_specs,
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, f_total, f_total), jnp.float32),
+            jax.ShapeDtypeStruct((batch, f_total, c_cols), jnp.float32),
+        ],
+        scratch_shapes=scratch,
+        input_output_aliases={0: 0, 1: 1},
+        interpret=interpret,
+    )(g0.astype(jnp.float32), c0.astype(jnp.float32), x, x, y)
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_f", "interpret"))

@@ -3,8 +3,9 @@ ridge readout → metrics) — see experiment.py for the API, ridge.py for the
 in-graph Gram/GCV readout solve."""
 
 from .experiment import Experiment, ExperimentConfig, ExperimentResult, channel_states
-from .ridge import (apply_readout, fit_ridge, fit_ridge_batched, gram, solve_gcv,
-                    solve_gcv_svd, with_bias)
+from .ridge import (apply_readout, fit_ridge, fit_ridge_batched,
+                    fit_ridge_streaming, gram, solve_gcv, solve_gcv_svd,
+                    with_bias)
 
 __all__ = [
     "Experiment",
@@ -14,6 +15,7 @@ __all__ = [
     "channel_states",
     "fit_ridge",
     "fit_ridge_batched",
+    "fit_ridge_streaming",
     "gram",
     "solve_gcv",
     "solve_gcv_svd",

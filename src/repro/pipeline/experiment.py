@@ -18,8 +18,14 @@ Scaling hooks:
 * the Gram accumulation inside the readout fit can run through the
   kernels/ridge_gram Pallas kernel (``readout_use_kernel=True``), and the
   reservoir through kernels/dfr_scan (``state_method="kernel"``);
-* ``channel_states`` vmaps state generation over per-channel (mask, input)
-  pairs for WDM-multiplexed reservoir ensembles (examples/wdm_scaling.py).
+* ``stream_chunk_k`` switches the whole run onto the streaming fused path
+  (DESIGN.md §8): train fit and test evaluation scan over K-chunks with the
+  reservoir state carried between chunks and per-chunk states folded into
+  running Gram / error accumulators, so peak device memory for the run is
+  O(B·chunk·N) instead of O(B·T·N);
+* ``channel_states`` evaluates per-channel (mask, input) pairs for
+  WDM-multiplexed reservoir ensembles (examples/wdm_scaling.py) — on the
+  kernel path via the per-lane mask tiling, still one Pallas launch.
 
 Numerics note: the readout solve is f32 on device (eigh of the Gram matrix),
 versus the host trainer's float64 SVD; on the paper's tasks the resulting
@@ -42,7 +48,7 @@ from repro.core.reservoir import generate_states
 from repro.core.tasks import SYMBOLS
 from repro.parallel.sharding import maybe_shard
 
-from .ridge import apply_readout, fit_ridge_batched
+from .ridge import apply_readout, fit_ridge_batched, fit_ridge_streaming, with_bias
 
 _SYMBOLS = tuple(float(s) for s in SYMBOLS)
 
@@ -68,6 +74,23 @@ class ExperimentConfig:
     state_method: str = "fast"     # "fast" | "ref" | "kernel"
     readout_use_kernel: bool = False
     quantize: bool = False
+    # Streaming fused path (DESIGN.md §8): a chunk length in periods switches
+    # the whole run onto pipeline/ridge.fit_ridge_streaming + chunked test
+    # evaluation — the full [B, T, N] state tensor never exists in HBM; peak
+    # state memory is O(B·stream_chunk_k·N).  NOTE the readout solve is then
+    # always the Gram/eigh route (G is all a streaming fit ever has —
+    # SVD-of-X needs X resident), regardless of ``readout_use_kernel``,
+    # which only picks HOW G accumulates (Pallas kernel vs einsum).  Parity
+    # is therefore stated vs the materialized *Gram* path; vs the unfused
+    # SVD default the last decade of λ-conditioning can differ (ridge.py
+    # ``solve_gcv_svd`` note).  ``state_noise_mode`` picks how digitiser
+    # noise enters the readout fit:
+    #   "sampled"  — materialize state noise and add it (unfused route only;
+    #                needs the state tensor, so incompatible with streaming),
+    #   "diagonal" — add the expected Gram of the noise, σ²·T_fit·I, to the
+    #                state block of G (single-pass; the streaming route).
+    stream_chunk_k: int | None = None
+    state_noise_mode: str = "sampled"
     # Pallas tiling knobs (only read by the kernel paths):
     #   kernel_block_s — dfr_scan sublane tile; None = smallest of {1, 2, 4, 8}
     #     covering the batch (a B ≤ 128 sweep pads to 128 lanes, not 1024).
@@ -78,6 +101,19 @@ class ExperimentConfig:
     def __post_init__(self):
         if not isinstance(self.ridge_l2, tuple):
             object.__setattr__(self, "ridge_l2", _as_tuple(self.ridge_l2))
+        if self.state_noise_mode not in ("sampled", "diagonal"):
+            raise ValueError(f"unknown state_noise_mode {self.state_noise_mode!r}")
+        if self.state_noise_rel:
+            if self.stream_chunk_k is not None and self.state_noise_mode != "diagonal":
+                raise ValueError(
+                    "the streaming path cannot materialize sampled state noise; "
+                    "set state_noise_mode='diagonal' (noise as its expected "
+                    "Tikhonov diagonal) or state_noise_rel=0")
+            if self.stream_chunk_k is None and self.state_noise_mode == "diagonal":
+                raise ValueError(
+                    "state_noise_mode='diagonal' is the streaming-path noise "
+                    "model (set stream_chunk_k); the unfused route keeps the "
+                    "sampled-noise path")
 
     @classmethod
     def from_dfrc(cls, cfg) -> "ExperimentConfig":
@@ -160,6 +196,51 @@ def _quantize(y: jnp.ndarray) -> jnp.ndarray:
     return sym[jnp.argmin(jnp.abs(y[..., None] - sym), axis=-1)]
 
 
+def _eval_streaming(cfg: ExperimentConfig, mask, j_te, te_tg3, w_fit, s0):
+    """Chunked test evaluation: states per chunk, running error accumulators.
+
+    ``te_tg3`` [B, T, C].  Returns (y_raw [B, T, C], err2 [B, C], ser_cnt [B])
+    with err2 = Σ_t (ŷ − y)² and ser_cnt the count of 4-PAM symbol
+    mismatches, both accumulated inside the chunk scan so no [B, T, N] state
+    block is ever resident (DESIGN.md §8).
+    """
+    from .ridge import _chunk_axis, _chunk_layout
+
+    b, t_total = j_te.shape
+    c_cols = te_tg3.shape[-1]
+    chunk_k = cfg.stream_chunk_k
+    n_chunks, t_padded = _chunk_layout(t_total, chunk_k)
+    jp = jnp.pad(j_te, ((0, 0), (0, t_padded - t_total)))
+    yp = jnp.pad(te_tg3, ((0, 0), (0, t_padded - t_total), (0, 0)))
+
+    carry0 = (jnp.asarray(s0, jnp.float32),
+              jnp.zeros((b, c_cols), jnp.float32),
+              jnp.zeros((b,), jnp.float32))
+    xs = (_chunk_axis(jp, n_chunks, chunk_k),
+          _chunk_axis(yp, n_chunks, chunk_k),
+          jnp.arange(n_chunks, dtype=jnp.int32) * chunk_k)
+
+    def body(carry, chunk):
+        s, err2, ser_cnt = carry
+        j_c, y_c, t_start = chunk
+        states, s = generate_states(cfg.model, j_c, mask, s0=s,
+                                    method=cfg.state_method,
+                                    block_s=cfg.kernel_block_s,
+                                    return_final=True)
+        y_hat = jnp.einsum("btf,bfc->btc", with_bias(states), w_fit)
+        tidx = t_start + jnp.arange(chunk_k, dtype=jnp.int32)
+        valid = (tidx < t_total).astype(jnp.float32)[None, :, None]
+        err = (y_hat - y_c) * valid
+        err2 = err2 + jnp.sum(err * err, axis=1)
+        mism = (_quantize(y_hat) != _quantize(y_c)) & (valid > 0)
+        ser_cnt = ser_cnt + jnp.sum(mism.astype(jnp.float32), axis=(1, 2))
+        return (s, err2, ser_cnt), y_hat
+
+    (_, err2, ser_cnt), y_chunks = jax.lax.scan(body, carry0, xs)
+    y_raw = jnp.moveaxis(y_chunks, 0, 1).reshape(b, t_padded, c_cols)[:, :t_total]
+    return y_raw, err2, ser_cnt
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg):
     """The whole experiment as one XLA program.  All arrays [B, T*]."""
@@ -174,10 +255,40 @@ def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg):
     j_tr = maybe_shard(j_tr, ("pod", "data"))
     j_te = maybe_shard(j_te, ("pod", "data"))
 
+    if cfg.stream_chunk_k is not None:
+        # -- streaming fused path (DESIGN.md §8): reservoir chunks feed the
+        # accumulate-into Gram kernel inside ONE lax.scan; test evaluation
+        # streams too.  The [B, T, N] state tensor never exists.
+        w_fit, lam_idx, s_carry = fit_ridge_streaming(
+            cfg.model, mask, j_tr, tr_tg, washout=cfg.washout,
+            chunk_k=cfg.stream_chunk_k, lambdas=cfg.ridge_l2,
+            state_method=cfg.state_method, block_s=cfg.kernel_block_s,
+            use_kernel=cfg.readout_use_kernel, block_t=cfg.readout_block_t,
+            noise_rel=(cfg.state_noise_rel
+                       if cfg.state_noise_mode == "diagonal" else 0.0))
+        te_tg3 = te_tg[..., None] if te_tg.ndim == 2 else te_tg
+        y_raw3, err2, ser_cnt = _eval_streaming(cfg, mask, j_te, te_tg3,
+                                                w_fit, s_carry)
+        t_test = te_tg3.shape[1]
+        # Same metric conventions as the materialized path below, evaluated
+        # from the running accumulators: per-channel NRMSE then channel-mean;
+        # SER on quantized-vs-quantized symbols.
+        var = jnp.var(te_tg3, axis=1)                  # [B, C]
+        nrmse_ch = jnp.sqrt((err2 / t_test) / (var + 1e-30))
+        nrmse = jnp.mean(nrmse_ch, axis=-1) if te_tg.ndim == 3 else nrmse_ch[:, 0]
+        ser = ser_cnt / (t_test * te_tg3.shape[-1])
+        y_raw = y_raw3 if te_tg.ndim == 3 else y_raw3[..., 0]
+        y_sym = _quantize(y_raw)
+        lam = jnp.asarray(cfg.ridge_l2, jnp.float32)[lam_idx]
+        y_out = y_sym if cfg.quantize else y_raw
+        return y_out, nrmse, ser, lam, w_fit
+
     # -- reservoir layer: batched state generation, carry train -> test ------
-    st_tr = generate_states(cfg.model, j_tr, mask, method=cfg.state_method,
-                            block_s=cfg.kernel_block_s)
-    st_te = generate_states(cfg.model, j_te, mask, s0=st_tr[:, -1, :],
+    st_tr, s_carry = generate_states(cfg.model, j_tr, mask,
+                                     method=cfg.state_method,
+                                     block_s=cfg.kernel_block_s,
+                                     return_final=True)
+    st_te = generate_states(cfg.model, j_te, mask, s0=s_carry,
                             method=cfg.state_method, block_s=cfg.kernel_block_s)
     st_tr = maybe_shard(st_tr, ("pod", "data"))
     st_te = maybe_shard(st_te, ("pod", "data"))
@@ -268,33 +379,36 @@ class Experiment:
                         ds.inputs_test, ds.targets_test)
 
 
-@functools.partial(jax.jit, static_argnames=("model", "method"))
+@functools.partial(jax.jit, static_argnames=("model", "method", "block_s"))
 def channel_states(model: NLModel, j: jnp.ndarray, masks: jnp.ndarray, *,
-                   s0: jnp.ndarray | None = None, method: str = "fast") -> jnp.ndarray:
+                   s0: jnp.ndarray | None = None, method: str = "fast",
+                   block_s: int | None = None) -> jnp.ndarray:
     """WDM ensemble states: per-channel masks over per-channel inputs.
 
     ``j`` [R, K] (one series per wavelength channel), ``masks`` [R, N] ->
     states [R, K, N].  ``s0`` [R, N] carries each channel's reservoir state
-    across calls (train -> test).  One vmapped program evaluates all R
-    channels in parallel — the software analogue of R wavelengths sharing
-    the physical ring.
+    across calls (train -> test).  One program evaluates all R channels in
+    parallel — the software analogue of R wavelengths sharing the physical
+    ring.
 
-    ``method="kernel"`` is rejected: the Pallas scan shares ONE mask across
-    all batch lanes (mask is a [N, 1] broadcast in VMEM), so per-channel
-    masks can't ride its batch tiling, and vmapping the ``pallas_call``
-    would serialise R launches at best.  Use "fast"/"ref" here.
+    ``method="kernel"`` rides the Pallas scan's per-lane mask path: each
+    wavelength channel is a batch lane with its own [N] mask tile resident
+    in VMEM (kernels/dfr_scan per-lane BlockSpec), so all R channels still
+    run as ONE kernel launch — no per-channel vmap over ``pallas_call``.
+    The jnp paths ("fast"/"ref") vmap over channels as before.
     """
-    if method == "kernel":
-        raise ValueError(
-            "channel_states does not support method='kernel': per-channel "
-            "masks cannot share the Pallas scan's single-mask batch tiling; "
-            "use method='fast' or 'ref'")
     j = jnp.asarray(j, jnp.float32)
     masks = jnp.asarray(masks, j.dtype)
     if j.shape[0] != masks.shape[0]:
         raise ValueError(f"channels mismatch: j {j.shape} vs masks {masks.shape}")
     if s0 is None:
         s0 = jnp.zeros((j.shape[0], masks.shape[1]), j.dtype)
+
+    if method == "kernel":
+        from repro.kernels.dfr_scan import ops as dfr_ops
+
+        return dfr_ops.dfr_scan(model, j, masks, jnp.asarray(s0, j.dtype),
+                                block_s=block_s)
 
     def one(jr, mr, s0r):
         return generate_states(model, jr, mr, s0=s0r, method=method)

@@ -12,6 +12,14 @@ which are (a) streamable — the T×N state matrix never has to be resident,
 parallel/sharding.maybe_shard, so under an active mesh each device reduces
 its local shard of the state stream and GSPMD inserts the psum.
 
+``fit_ridge_streaming`` takes (a) to its conclusion (DESIGN.md §8): one
+jitted ``lax.scan`` over K-chunks drives the reservoir kernel and the
+accumulate-into Gram kernel back to back, so the full per-instance state
+matrix never exists in HBM — peak state memory is O(B·chunk·N) instead of
+O(B·T·N), with washout handled by row masking, the bias column folded into
+the chunk update, and digitiser noise applied as its expected Tikhonov
+diagonal (``state_noise_mode="diagonal"``).
+
 λ selection matches core/readout.py: generalised cross-validation
 
     GCV(λ) = T·‖y − ŷ_λ‖² / (T − dof(λ))²,   dof(λ) = Σ λᵢ/(λᵢ + λ′)
@@ -29,6 +37,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.reservoir import generate_states
 from repro.parallel.sharding import maybe_shard
 
 
@@ -197,3 +206,176 @@ def apply_readout(states: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """y = [states, 1] @ w; squeezes a single output channel."""
     y = with_bias(states) @ w
     return y[..., 0] if y.shape[-1] == 1 else y
+
+
+def _chunk_layout(k_total: int, chunk_k: int):
+    """Static chunking of a K-long stream: (n_chunks, padded K)."""
+    if chunk_k < 1:
+        raise ValueError(f"chunk_k must be >= 1, got {chunk_k}")
+    n_chunks = -(-k_total // chunk_k)
+    return n_chunks, n_chunks * chunk_k
+
+
+def _chunk_axis(x: jnp.ndarray, n_chunks: int, chunk_k: int) -> jnp.ndarray:
+    """[B, Kp, ...] -> [n_chunks, B, chunk_k, ...] (zero-padded upstream)."""
+    b = x.shape[0]
+    return jnp.moveaxis(x.reshape(b, n_chunks, chunk_k, *x.shape[2:]), 1, 0)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "model", "washout", "chunk_k", "lambdas", "state_method", "block_s",
+    "use_kernel", "block_t", "block_f", "noise_rel"))
+def fit_ridge_streaming(
+    model,
+    mask: jnp.ndarray,     # [N]
+    j: jnp.ndarray,        # [B, K] sample-and-held input stream
+    targets: jnp.ndarray,  # [B, K] or [B, K, C]
+    *,
+    washout: int,
+    chunk_k: int,
+    lambdas: tuple[float, ...] = (1e-6,),
+    state_method: str = "kernel",
+    block_s: int | None = None,
+    use_kernel: bool = True,
+    block_t: int = 512,
+    block_f: int = 128,
+    noise_rel: float = 0.0,
+    s0: jnp.ndarray | None = None,
+):
+    """Streaming fused reservoir -> readout fit: states never fully resident.
+
+    ONE ``lax.scan`` over ``ceil(K / chunk_k)`` chunks; each iteration runs
+    the reservoir for ``chunk_k`` periods (resuming bit-exactly from the
+    carried final state), masks washout/padding rows to zero, appends the
+    bias column, and folds the chunk into running per-instance Gram stacks
+    (G [B, F, F], c [B, F, C], F = N + 1) — via the accumulate-into Pallas
+    kernel (``use_kernel=True``, carried in feature-padded [B, Fp, Fp] form
+    so no per-chunk pad/slice copies of G) or a plain einsum.  Peak live
+    state memory is O(B·chunk_k·N); the [B, K, N] state tensor of the
+    materialized path never exists.
+
+    The solve is necessarily the Gram/eigh route (``solve_gcv``): running
+    (G, c, ‖y‖²) statistics are all a streaming fit ever holds, and the
+    better-conditioned SVD-of-X solve needs X resident.  Parity targets are
+    therefore the materialized *Gram* fit (``fit_ridge_batched(use_kernel=
+    True)``); vs the SVD default the last decade of λ-conditioning can
+    differ (see ``solve_gcv_svd``).
+
+    ``noise_rel`` > 0 applies the digitiser noise of the materialized path
+    in expectation, without a second pass over the stream: for i.i.d. state
+    noise ε with σ = noise_rel·std(states over the fit window),
+
+        E[(X+ε)ᵀ(X+ε)] = XᵀX + σ²·T_fit·I,   E[(X+ε)ᵀy] = Xᵀy,
+
+    so the fit adds σ²·T_fit to the N state-feature diagonal entries of G
+    (not the bias), with σ estimated from in-scan sum/sum-of-squares
+    accumulators over the same fit window.  This is
+    ``ExperimentConfig.state_noise_mode="diagonal"``; the sampled-noise path
+    stays available on the unfused route.
+
+    Returns ``(w [B, F, C], lam_idx [B], s_end [B, N])`` where ``s_end`` is
+    the reservoir state after period K - 1 (the train -> test carry), exact
+    even when K is not a multiple of ``chunk_k``.
+    """
+    j = jnp.asarray(j, jnp.float32)
+    if j.ndim == 1:
+        j = j[None, :]
+    b, k_total = j.shape
+    y = jnp.asarray(targets, jnp.float32)
+    if y.ndim == 1:
+        y = y[None, :]
+    if y.ndim == 2:
+        y = y[..., None]
+    if y.shape[:2] != (b, k_total):
+        raise ValueError(f"targets {y.shape} do not match inputs ({b}, {k_total})")
+    n = int(mask.shape[-1])
+    f = n + 1
+    c_cols = y.shape[-1]
+    if k_total <= washout:
+        raise ValueError(f"stream length {k_total} <= washout {washout}")
+    t_fit = k_total - washout
+    n_chunks, k_padded = _chunk_layout(k_total, chunk_k)
+
+    interpret = jax.default_backend() != "tpu"
+    if use_kernel:
+        from repro.kernels.ridge_gram.ops import effective_block_t
+        from repro.kernels.ridge_gram.ridge_gram import gram_tiled_batched_into
+
+        eff_bt = effective_block_t(chunk_k, block_t)
+        chunk_pt = chunk_k + (-chunk_k % eff_bt)
+        fq = f + (-f % block_f)
+    else:
+        chunk_pt, fq = chunk_k, f
+
+    jp = jnp.pad(j, ((0, 0), (0, k_padded - k_total)))
+    yp = jnp.pad(y, ((0, 0), (0, k_padded - k_total), (0, 0)))
+    if s0 is None:
+        s0 = jnp.zeros((b, n), jnp.float32)
+
+    carry0 = (
+        jnp.asarray(s0, jnp.float32),          # running reservoir state
+        jnp.zeros((b, fq, fq), jnp.float32),   # G (feature-padded on kernel path)
+        jnp.zeros((b, fq, c_cols), jnp.float32),
+        jnp.zeros((b,), jnp.float32),          # ‖y‖² over the fit window
+        jnp.zeros((b,), jnp.float32),          # Σ s   (noise σ estimate)
+        jnp.zeros((b,), jnp.float32),          # Σ s²
+        jnp.asarray(s0, jnp.float32),          # state after period K - 1
+    )
+    xs = (_chunk_axis(jp, n_chunks, chunk_k),
+          _chunk_axis(yp, n_chunks, chunk_k),
+          jnp.arange(n_chunks, dtype=jnp.int32) * chunk_k)
+
+    def body(carry, chunk):
+        s, g, cvec, y2, ssum, ssq, s_end = carry
+        j_c, y_c, k_start = chunk
+        states, s_next = generate_states(model, j_c, mask, s0=s,
+                                         method=state_method, block_s=block_s,
+                                         return_final=True)
+        tidx = k_start + jnp.arange(chunk_k, dtype=jnp.int32)
+        vfit = ((tidx >= washout) & (tidx < k_total)).astype(jnp.float32)
+
+        x = jnp.concatenate(
+            [states, jnp.ones((b, chunk_k, 1), states.dtype)], axis=-1)
+        x = x * vfit[None, :, None]            # washout/padding rows -> zero
+        yv = y_c * vfit[None, :, None]
+        y2 = y2 + jnp.sum(yv * yv, axis=(1, 2))
+        if noise_rel:
+            sv = states * vfit[None, :, None]
+            ssum = ssum + jnp.sum(sv, axis=(1, 2))
+            ssq = ssq + jnp.sum(sv * sv, axis=(1, 2))
+
+        if use_kernel:
+            xq = jnp.pad(x, ((0, 0), (0, chunk_pt - chunk_k), (0, fq - f)))
+            yq = jnp.pad(yv, ((0, 0), (0, chunk_pt - chunk_k), (0, 0)))
+            g, cvec = gram_tiled_batched_into(g, cvec, xq, yq, block_t=eff_bt,
+                                              block_f=block_f, interpret=interpret)
+        else:
+            g = g + jnp.einsum("btf,btg->bfg", x, x)
+            cvec = cvec + jnp.einsum("btf,btc->bfc", x, yv)
+
+        # State after period K - 1 (this chunk's padded tail, if any, keeps
+        # evolving on zero input — the carry must come from the last *real*
+        # period, not the end of the chunk).
+        in_chunk = (k_start <= k_total - 1) & (k_total - 1 < k_start + chunk_k)
+        last_local = jnp.clip(k_total - 1 - k_start, 0, chunk_k - 1)
+        s_k = jax.lax.dynamic_index_in_dim(states, last_local, axis=1,
+                                           keepdims=False)
+        s_end = jnp.where(in_chunk, s_k, s_end)
+        return (s_next, g, cvec, y2, ssum, ssq, s_end), None
+
+    (s_last, g, cvec, y2, ssum, ssq, s_end), _ = jax.lax.scan(body, carry0, xs)
+    del s_last
+
+    if noise_rel:
+        cnt = jnp.asarray(t_fit * n, jnp.float32)
+        var = jnp.maximum(ssq / cnt - (ssum / cnt) ** 2, 0.0)
+        sig2_t = (noise_rel ** 2) * var * t_fit       # σ²·T_fit per instance
+        dn = jnp.arange(n)
+        g = g.at[:, dn, dn].add(sig2_t[:, None])
+    g = g[:, :f, :f]
+    cvec = cvec[:, :f]
+
+    lams = tuple(lambdas)
+    w, idx = jax.vmap(
+        lambda gb, cb, y2b: solve_gcv(gb, cb, y2b, t_fit, lams))(g, cvec, y2)
+    return w, idx, s_end

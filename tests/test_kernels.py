@@ -9,7 +9,8 @@ import pytest
 from repro.core import MZISine, MackeyGlass, SiliconMR, make_mask
 from repro.kernels.dfr_scan import auto_block_s, dfr_scan, dfr_scan_ref, padded_lanes
 from repro.kernels.ridge_gram import (effective_block_t, gram_accumulate,
-                                      gram_accumulate_batched, gram_ref,
+                                      gram_accumulate_batched,
+                                      gram_accumulate_batched_into, gram_ref,
                                       gram_ref_batched)
 
 MODELS = [SiliconMR(), SiliconMR(beta_tpa=0.7), MackeyGlass(), MZISine()]
@@ -167,3 +168,116 @@ def test_dfr_scan_rejects_bad_block_s():
     mask = make_mask(5, seed=1)
     with pytest.raises(ValueError, match="block_s"):
         dfr_scan(model, j, mask, jnp.zeros((4, 5), jnp.float32), block_s=3)
+
+
+# ---------------------------------------------------------------------------
+# Chunked emission: final-state output + bit-exact K-chunk resume
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model", MODELS, ids=lambda m: type(m).__name__ + str(getattr(m, "beta_tpa", "")))
+@pytest.mark.parametrize("block_s", [1, 8])
+def test_dfr_scan_chunked_resume_bit_exact(model, block_s):
+    """K split into chunks with the carried final state must BIT-match one
+    full-K call, for every NL model and both sublane tiles: the final-state
+    output is the kernel's f32 VMEM carry, so resuming from it replays the
+    exact arithmetic of the uninterrupted scan (the streaming fit's
+    correctness contract)."""
+    rng = np.random.default_rng(17)
+    b, k, n = 3, 13, 9
+    j = jnp.asarray(rng.uniform(0, 1, (b, k)), jnp.float32)
+    mask = make_mask(n, seed=3)
+    s0 = jnp.asarray(rng.uniform(0, 0.3, (b, n)), jnp.float32)
+
+    full, fin_full = dfr_scan(model, j, mask, s0, block_s=block_s,
+                              return_final=True)
+    np.testing.assert_array_equal(np.asarray(fin_full),
+                                  np.asarray(full[:, -1, :]))
+
+    chunks, s = [], s0
+    for lo in (0, 5, 9):  # uneven chunk lengths 5 / 4 / 4
+        hi = min(lo + 5 if lo == 0 else lo + 4, k)
+        st, s = dfr_scan(model, j[:, lo:hi], mask, s, block_s=block_s,
+                         return_final=True)
+        chunks.append(st)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.concatenate(chunks, axis=1)), np.asarray(full))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(fin_full))
+
+
+# ---------------------------------------------------------------------------
+# Per-lane masks (WDM ensembles: one mask per batch lane)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,k,n", [(3, 11, 17), (5, 7, 64)])
+def test_dfr_scan_per_lane_mask_matches_oracle(b, k, n):
+    """A [B, N] mask stack gives each batch lane its own mask — equal to B
+    independent single-mask oracle runs."""
+    model = SiliconMR()
+    rng = np.random.default_rng(b + k + n)
+    j = jnp.asarray(rng.uniform(0, 1, (b, k)), jnp.float32)
+    masks = jnp.stack([make_mask(n, seed=20 + i) for i in range(b)])
+    s0 = jnp.asarray(rng.uniform(0, 0.3, (b, n)), jnp.float32)
+    out = dfr_scan(model, j, masks, s0, block_s=1)
+    ref = jnp.stack([dfr_scan_ref(model, j[i:i + 1], masks[i], s0[i:i + 1])[0]
+                     for i in range(b)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+def test_dfr_scan_per_lane_mask_batch_mismatch():
+    model = SiliconMR()
+    j = jnp.zeros((4, 3), jnp.float32)
+    masks = jnp.zeros((3, 5), jnp.float32)  # 3 masks for 4 lanes
+    with pytest.raises(ValueError, match="per-lane mask"):
+        dfr_scan(model, j, masks, jnp.zeros((4, 5), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Accumulate-into Gram: chunked folding == one-shot
+# ---------------------------------------------------------------------------
+
+
+def test_gram_accumulate_into_bit_matches_one_shot():
+    """Folding T-chunks into a running (G, c) is bit-identical to one pass
+    over the concatenated stream when chunks align with the T tile: the
+    kernel seeds its VMEM accumulator from the running value, so the f32
+    additions happen in the same order."""
+    rng = np.random.default_rng(31)
+    b, t, f, bt = 2, 96, 20, 16
+    x = jnp.asarray(rng.standard_normal((b, t, f)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((b, t, 1)), jnp.float32)
+    g_full, c_full = gram_accumulate_batched(x, y, block_t=bt)
+    g = jnp.zeros((b, f, f), jnp.float32)
+    c = jnp.zeros((b, f, 1), jnp.float32)
+    for lo in range(0, t, 32):  # 32 is a multiple of the 16-row tile
+        g, c = gram_accumulate_batched_into(g, c, x[:, lo:lo + 32],
+                                            y[:, lo:lo + 32], block_t=bt)
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(g_full))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c_full))
+
+
+@pytest.mark.parametrize("t,f,c", [(100, 37, 2), (64, 129, 1)])
+def test_gram_accumulate_into_padding_path(t, f, c):
+    """Odd T (tile padding) and F > block_f (init-stack padding) through the
+    ops wrapper; result matches the pure-jnp oracle plus the init."""
+    rng = np.random.default_rng(t + f)
+    b = 3
+    x = jnp.asarray(rng.standard_normal((b, t, f)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((b, t, c)), jnp.float32)
+    g0 = jnp.asarray(rng.standard_normal((b, f, f)), jnp.float32)
+    c0 = jnp.asarray(rng.standard_normal((b, f, c)), jnp.float32)
+    g, mom = gram_accumulate_batched_into(g0, c0, x, y)
+    gr, mr = gram_ref_batched(x, y)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g0 + gr),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mom), np.asarray(c0 + mr),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_gram_accumulate_into_rejects_shape_mismatch():
+    x = jnp.zeros((2, 16, 5), jnp.float32)
+    y = jnp.zeros((2, 16, 1), jnp.float32)
+    with pytest.raises(ValueError, match="init stacks"):
+        gram_accumulate_batched_into(jnp.zeros((2, 4, 4)), jnp.zeros((2, 4, 1)),
+                                     x, y)

@@ -1,0 +1,253 @@
+"""Streaming fused reservoir -> readout path (DESIGN.md §8).
+
+Guards the tentpole property of the streaming pipeline: the full [B, T, N]
+state tensor never exists in HBM — the fit is ONE ``lax.scan`` over K-chunks
+whose largest live state block is the chunk itself — while the numbers stay
+at parity with the materialized kernel path (noise off) and the
+diagonal-noise mode stays within its own pinned thresholds.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SiliconMR, make_mask, tasks
+from repro.core.reservoir import generate_states
+from repro.kernels.dfr_scan import padded_lanes
+from repro.pipeline import (Experiment, ExperimentConfig, channel_states,
+                            fit_ridge_batched, fit_ridge_streaming)
+from repro.pipeline.introspect import (count_scans, state_tensor_bytes,
+                                       trace_jaxpr)
+
+LAMS = (1e-8, 1e-6, 1e-4)
+
+
+def _stack(datasets):
+    return (np.stack([d.inputs_train for d in datasets]),
+            np.stack([d.targets_train for d in datasets]),
+            np.stack([d.inputs_test for d in datasets]),
+            np.stack([d.targets_test for d in datasets]))
+
+
+@pytest.fixture(scope="module")
+def narma_batch():
+    return _stack([tasks.narma10(720, seed=s) for s in range(4)])
+
+
+def _base_cfg(**kw):
+    base = dict(model=SiliconMR(), n_nodes=32, washout=40, ridge_l2=LAMS,
+                state_noise_rel=0.0, state_method="kernel",
+                readout_use_kernel=True)
+    base.update(kw)
+    return ExperimentConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# Fit-level parity: streamed == materialized kernel fit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernel", [True, False], ids=["gram-kernel", "gram-jnp"])
+def test_fit_ridge_streaming_matches_materialized(use_kernel):
+    """Chunked fit ≈ materialized Gram fit (same λ choice, same s_end), with
+    the end-of-stream state exact even when K % chunk_k != 0."""
+    rng = np.random.default_rng(5)
+    model = SiliconMR()
+    b, k, n, w0 = 3, 200, 24, 30
+    j = jnp.asarray(rng.uniform(0, 1, (b, k)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((b, k)), jnp.float32)
+    mask = make_mask(n, seed=1)
+
+    st = generate_states(model, j, mask, method="kernel")
+    w_m, idx_m = fit_ridge_batched(st[:, w0:], y[:, w0:], lambdas=LAMS,
+                                   use_kernel=True)
+    for chunk in (64, 72):  # 200 % 72 != 0 exercises the padded tail
+        w_s, idx_s, s_end = fit_ridge_streaming(
+            model, mask, j, y, washout=w0, chunk_k=chunk, lambdas=LAMS,
+            state_method="kernel", use_kernel=use_kernel)
+        np.testing.assert_array_equal(np.asarray(s_end),
+                                      np.asarray(st[:, -1, :]))
+        assert np.array_equal(np.asarray(idx_s), np.asarray(idx_m))
+        # weights agree to f32 Gram-association tolerance (the two paths sum
+        # the same products in different tile orders)
+        np.testing.assert_allclose(np.asarray(w_s), np.asarray(w_m),
+                                   atol=0.1, rtol=0.1)
+
+
+def test_fit_ridge_streaming_rejects_short_stream():
+    model = SiliconMR()
+    mask = make_mask(8, seed=1)
+    j = jnp.zeros((2, 30), jnp.float32)
+    with pytest.raises(ValueError, match="washout"):
+        fit_ridge_streaming(model, mask, j, jnp.zeros((2, 30)), washout=40,
+                            chunk_k=16, lambdas=(1e-6,))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end parity through Experiment.run
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_experiment_parity(narma_batch):
+    """Streamed Experiment == materialized kernel-path Experiment: NRMSE and
+    SER within 1e-3, λ selection identical (noise off, tile-aligned chunk —
+    the acceptance bar of the streaming PR)."""
+    res_m = Experiment(_base_cfg()).run(*narma_batch)
+    res_s = Experiment(_base_cfg(stream_chunk_k=128)).run(*narma_batch)
+    assert np.max(np.abs(res_s.nrmse - res_m.nrmse)) <= 1e-3, (
+        res_s.nrmse, res_m.nrmse)
+    assert np.max(np.abs(res_s.ser - res_m.ser)) <= 1e-3
+    np.testing.assert_array_equal(res_s.lam, res_m.lam)
+    assert res_s.y_pred.shape == res_m.y_pred.shape
+
+
+def test_streaming_experiment_jnp_state_method(narma_batch):
+    """The chunk scan also runs with the jnp reservoir ('fast') + jnp Gram —
+    streaming is a pipeline property, not a kernel-only mode."""
+    cfg = _base_cfg(stream_chunk_k=128)
+    cfg = dataclasses.replace(cfg, state_method="fast", readout_use_kernel=False)
+    res_s = Experiment(cfg).run(*narma_batch)
+    res_m = Experiment(dataclasses.replace(
+        _base_cfg(), state_method="fast", readout_use_kernel=True)).run(*narma_batch)
+    assert np.max(np.abs(res_s.nrmse - res_m.nrmse)) <= 2e-3
+
+
+def test_streaming_multichannel(narma_batch):
+    """C = 2 output channels through the streamed fit + streamed eval."""
+    tr_in, tr_tg, te_in, te_tg = narma_batch
+
+    def two_ch(tg):
+        return np.stack([tg, np.roll(tg, 1, axis=-1)], axis=-1)
+
+    cfg = _base_cfg(stream_chunk_k=128, ridge_l2=(1e-4,))
+    res1 = Experiment(cfg).run(*narma_batch)
+    res2 = Experiment(cfg).run(tr_in, two_ch(tr_tg), te_in, two_ch(te_tg))
+    b, t_test = res1.y_pred.shape
+    assert res2.y_pred.shape == (b, t_test, 2)
+    assert res2.readout_w.shape == (b, cfg.n_nodes + 1, 2)
+    np.testing.assert_allclose(res2.y_pred[..., 0], res1.y_pred, atol=1e-5)
+    assert np.all(np.isfinite(res2.nrmse))
+
+
+# ---------------------------------------------------------------------------
+# Diagonal noise mode (noise-as-Tikhonov)
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_diagonal_noise_regression(narma_batch):
+    """σ²·T·I-regularised streamed fit stays within its own pinned NRMSE band
+    and close to the materialized sampled-noise fit (same σ rule, noise in
+    expectation instead of one draw)."""
+    cfg_s = dataclasses.replace(_base_cfg(stream_chunk_k=128),
+                                state_noise_rel=0.003,
+                                state_noise_mode="diagonal")
+    cfg_m = dataclasses.replace(_base_cfg(), state_noise_rel=0.003)
+    res_s = Experiment(cfg_s).run(*narma_batch)
+    res_m = Experiment(cfg_m).run(*narma_batch)
+    assert np.all(res_s.nrmse < 0.85), res_s.nrmse
+    assert np.all(res_s.nrmse > 0.2), res_s.nrmse
+    # expectation-vs-draw: same regularisation scale, so the two fits land in
+    # the same band (spread dominated by the single sampled draw)
+    assert np.max(np.abs(res_s.nrmse - res_m.nrmse)) < 0.1, (
+        res_s.nrmse, res_m.nrmse)
+
+
+def test_noise_mode_validation():
+    with pytest.raises(ValueError, match="diagonal"):
+        _base_cfg(stream_chunk_k=64, state_noise_rel=0.003)  # sampled + stream
+    with pytest.raises(ValueError, match="streaming"):
+        ExperimentConfig(state_noise_rel=0.003, state_noise_mode="diagonal")
+    with pytest.raises(ValueError, match="state_noise_mode"):
+        ExperimentConfig(state_noise_mode="bogus")
+    # noise off: mode is irrelevant on both routes
+    _base_cfg(stream_chunk_k=64)
+    ExperimentConfig(state_noise_rel=0.0, state_noise_mode="diagonal")
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr guard: the memory property itself
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_fit_jaxpr_has_no_full_t_state_tensor():
+    """Extends the PR 2 jaxpr guard: the streaming fit lowers to exactly ONE
+    lax.scan over chunks, and NO intermediate in the whole program (scan body
+    included) has [*, T, N]-like shape — the state tensor the tentpole kills.
+    The largest live state block is the lane-padded chunk."""
+    model = SiliconMR()
+    b, k, n, w0, chunk = 4, 256, 24, 40, 64
+    mask = make_mask(n, seed=1)
+    j = jnp.zeros((b, k), jnp.float32)
+    y = jnp.zeros((b, k), jnp.float32)
+
+    cj = trace_jaxpr(
+        lambda jj, yy: fit_ridge_streaming(model, mask, jj, yy, washout=w0,
+                                           chunk_k=chunk, lambdas=(1e-6,),
+                                           state_method="kernel",
+                                           use_kernel=True), j, y)
+    assert count_scans(cj) == 1
+    assert state_tensor_bytes(cj, k, b * k * n) == 0
+    # peak chunk block vs the lane/feature-padded chunk budget
+    fp = -(-(n + 1) // 128) * 128
+    chunk_budget = padded_lanes(b) * chunk * fp * 4
+    peak_chunk = state_tensor_bytes(cj, chunk, b * chunk * n)
+    assert 0 < peak_chunk <= 2 * chunk_budget, (peak_chunk, chunk_budget)
+
+    # sanity: the materialized fit DOES carry the full-T state tensor
+    def fit_mat(jj, yy):
+        st = generate_states(model, jj, mask, method="kernel")
+        return fit_ridge_batched(st[:, w0:], yy[:, w0:], lambdas=(1e-6,),
+                                 use_kernel=True)
+
+    cj_m = trace_jaxpr(fit_mat, j, y)
+    assert state_tensor_bytes(cj_m, k, b * k * n) >= b * k * n * 4
+
+
+def test_streaming_run_pipeline_jaxpr(narma_batch):
+    """The whole Experiment streaming program (fit + eval) holds no full-T
+    state tensor for either the train or the test stream."""
+    tr_in, tr_tg, te_in, te_tg = narma_batch
+    cfg = _base_cfg(stream_chunk_k=128)
+    from repro.pipeline.experiment import _run_pipeline
+
+    mask = Experiment(cfg).mask
+    cj = trace_jaxpr(
+        lambda a, b_, c, d: _run_pipeline(cfg, mask, a, b_, c, d),
+        jnp.asarray(tr_in, jnp.float32), jnp.asarray(tr_tg, jnp.float32),
+        jnp.asarray(te_in, jnp.float32), jnp.asarray(te_tg, jnp.float32))
+    b = tr_in.shape[0]
+    for t_len in (tr_in.shape[1], te_in.shape[1]):
+        assert state_tensor_bytes(cj, t_len, b * t_len * cfg.n_nodes) == 0, t_len
+
+
+# ---------------------------------------------------------------------------
+# channel_states on the kernel path (per-lane masks)
+# ---------------------------------------------------------------------------
+
+
+def test_channel_states_kernel_matches_ref():
+    model = SiliconMR()
+    rng = np.random.default_rng(7)
+    r, k, n = 4, 30, 12
+    j = jnp.asarray(rng.uniform(0, 1, (r, k)), jnp.float32)
+    masks = jnp.stack([make_mask(n, seed=40 + i) for i in range(r)])
+    st_k = channel_states(model, j, masks, method="kernel")
+    st_r = channel_states(model, j, masks, method="ref")
+    assert st_k.shape == (r, k, n)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r), atol=1e-5)
+
+
+def test_channel_states_kernel_carries_s0():
+    model = SiliconMR()
+    rng = np.random.default_rng(9)
+    r, k, n = 3, 17, 9
+    j = jnp.asarray(rng.uniform(0, 1, (r, k)), jnp.float32)
+    masks = jnp.stack([make_mask(n, seed=50 + i) for i in range(r)])
+    full = channel_states(model, j, masks, method="kernel")
+    st1 = channel_states(model, j[:, :8], masks, method="kernel")
+    st2 = channel_states(model, j[:, 8:], masks, s0=st1[:, -1, :],
+                         method="kernel")
+    np.testing.assert_array_equal(
+        np.asarray(jnp.concatenate([st1, st2], axis=1)), np.asarray(full))
