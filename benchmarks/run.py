@@ -15,11 +15,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list of fig5,fig6,fig7,table1,kernels,"
-                         "kernel_batching,streaming_fusion,roofline")
+                         "kernel_batching,streaming_fusion,wdm_streaming,"
+                         "roofline")
     args = ap.parse_args()
 
     from . import (fig5_nrmse, fig6_ser, fig7_training_time, kernel_batching,
-                   kernel_bench, roofline, streaming_fusion, table1_power)
+                   kernel_bench, roofline, streaming_fusion, table1_power,
+                   wdm_streaming)
 
     sections = {
         "fig5": fig5_nrmse.run,
@@ -29,6 +31,7 @@ def main() -> None:
         "kernels": kernel_bench.run,
         "kernel_batching": kernel_batching.run,
         "streaming_fusion": streaming_fusion.run,
+        "wdm_streaming": wdm_streaming.run,
         "roofline": roofline.run,
     }
     chosen = args.only.split(",") if args.only else list(sections)

@@ -1,0 +1,288 @@
+"""Streaming WDM ensemble benchmark: peak memory + wall, f32 vs bf16 chunks.
+
+Quantifies what ISSUE 4 adds on top of the PR 3 streaming work.  The paper's
+scalability pitch (Section VI) is wavelength-division multiplexing — R
+microring channels sharing one delay loop — but the materialized WDM path
+(`channel_states` + `fit_ridge_batched`) stages the full [R, K, N] channel-
+state tensor in HBM: a long stream at R = 64 / K = 10k / N = 100 is ~256 MB
+of f32 states consumed exactly once, and it grows linearly in K.  The
+streaming WDM fit (`pipeline/ridge.fit_ridge_streaming_wdm`) scans K-chunks
+with the per-lane-mask reservoir kernel (all R channels = ONE launch) and
+folds per-channel Gram stacks, so the largest live state block is the
+(lane-padded) chunk — independent of K.  `stream_state_dtype="bfloat16"`
+additionally halves the chunk's HBM round-trip (DESIGN.md §9).
+
+Memory numbers are derived from the traced jaxpr (`pipeline/introspect`), so
+they are exact on any backend; wall times are measured only where the
+backend can afford them (every cell on TPU, the small cells in interpret
+mode — byte columns are what CI gates on).
+
+Emits ``BENCH_wdm_streaming.json``; the ``--smoke`` run is the tier-1 CI
+regression gate:
+
+* streamed fits must hold NO full-K state tensor (f32 and bf16 chunks),
+* streamed ``peak_state_bytes`` must not exceed 2× the lane/feature-padded
+  chunk budget — including the R = 64 / K = 10k headline cell,
+* bf16 chunks must actually halve the peak live state block (ratio ≤ 0.6),
+* streamed-vs-materialized NRMSE/SER parity ≤ 1e-3 with f32 chunks, and
+  within the documented looser band (≤ 0.06 NRMSE / 0.05 SER) with bf16.
+
+  PYTHONPATH=src python -m benchmarks.wdm_streaming [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SiliconMR, make_mask
+from repro.kernels.dfr_scan import padded_lanes
+from repro.pipeline import channel_states, fit_ridge_batched, fit_ridge_streaming_wdm
+from repro.pipeline.introspect import (max_intermediate_bytes,
+                                       state_tensor_bytes, trace_jaxpr)
+
+from .common import csv_row, stack_datasets, time_fn
+
+GRID_R = (4, 16, 64)
+GRID_K = (1000, 10000)
+N_NODES = 100
+WASHOUT = 60
+LAMS = (1e-6, 1e-4)
+PARITY_TOL = 1e-3
+# bf16 chunks round states to 8 mantissa bits; measured drift on the chan-eq
+# parity cell is ~0.025 NRMSE/SER (DESIGN.md §9) — gate with 2x head-room.
+BF16_NRMSE_TOL = 0.06
+BF16_SER_TOL = 0.05
+# Off-TPU the kernels run interpret-mode-slow; only time cells up to this
+# many state elements so the full grid still finishes.  TPU times all.
+CPU_TIME_BUDGET = 4 * 1000 * 100
+
+
+def _chunk_for(k: int) -> int:
+    """Tile-aligned chunk (multiple of the 8-row T tiles)."""
+    return min(256, max(8, (k // 8) & ~7))
+
+
+def _masks(r: int, n: int) -> jnp.ndarray:
+    return jnp.stack([make_mask(n, seed=10 + i) for i in range(r)])
+
+
+def _fit_fns(r: int, n: int, chunk: int, state_dtype: str | None):
+    model = SiliconMR()
+    masks = _masks(r, n)
+
+    def materialized(j, y):
+        st = channel_states(model, j, masks, method="kernel")
+        return fit_ridge_batched(st[:, WASHOUT:], y[:, WASHOUT:],
+                                 lambdas=LAMS, use_kernel=True)
+
+    def streamed(j, y):
+        w, idx, _ = fit_ridge_streaming_wdm(
+            model, masks, j, y, washout=WASHOUT, chunk_k=chunk, lambdas=LAMS,
+            state_method="kernel", use_kernel=True, state_dtype=state_dtype)
+        return w, idx
+
+    return jax.jit(materialized), jax.jit(streamed)
+
+
+def measure_cell(r: int, k: int, *, n: int = N_NODES,
+                 state_dtype: str | None = None, chunk: int | None = None,
+                 timed: bool | None = None, iters: int = 2) -> dict:
+    chunk = chunk or _chunk_for(k)
+    mat, stream = _fit_fns(r, n, chunk, state_dtype)
+    j = jnp.zeros((r, k), jnp.float32)
+    y = jnp.zeros((r, k), jnp.float32)
+
+    cj_m = trace_jaxpr(mat, j, y)
+    cj_s = trace_jaxpr(stream, j, y)
+    # chunk budget = lane-padded channels x chunk x feature-tile-padded F at
+    # the chunk dtype — the largest state block the streamed path may keep
+    itemsize = jnp.dtype(state_dtype or jnp.float32).itemsize
+    fp = -(-(n + 1) // 128) * 128
+    entry = {
+        "r": r, "k": k, "n": n, "chunk": chunk,
+        "state_dtype": state_dtype or "float32",
+        "materialized": {
+            "peak_state_bytes": state_tensor_bytes(cj_m, k, r * k * n),
+            "peak_any_bytes": max_intermediate_bytes(cj_m),
+        },
+        "streamed": {
+            "peak_state_bytes": state_tensor_bytes(cj_s, chunk, r * chunk * n),
+            "peak_any_bytes": max_intermediate_bytes(cj_s),
+            "full_k_state_bytes": state_tensor_bytes(cj_s, k, r * k * n),
+            "chunk_budget_bytes": padded_lanes(r) * chunk * fp * itemsize,
+        },
+    }
+    entry["state_bytes_ratio"] = round(
+        entry["materialized"]["peak_state_bytes"]
+        / max(1, entry["streamed"]["peak_state_bytes"]), 2)
+
+    if timed is None:
+        timed = (jax.default_backend() == "tpu" or r * k * n <= CPU_TIME_BUDGET)
+    entry["timed"] = bool(timed)
+    if timed:
+        rng = np.random.default_rng(r + k + n)
+        j = jnp.asarray(rng.uniform(0, 1, (r, k)), jnp.float32)
+        y = jnp.asarray(rng.standard_normal((r, k)), jnp.float32)
+        entry["materialized"]["wall_us"] = round(time_fn(mat, j, y, iters=iters), 1)
+        entry["streamed"]["wall_us"] = round(time_fn(stream, j, y, iters=iters), 1)
+    return entry
+
+
+def parity_cell(*, r: int, n: int, n_symbols: int, chunk: int,
+                lams: tuple[float, ...] = LAMS) -> dict:
+    """Streamed vs materialized WDMExperiment on the chan-eq task, f32 and
+    bf16 chunks (noise off)."""
+    import dataclasses
+
+    from repro.core import tasks
+    from repro.pipeline import ExperimentConfig, WDMExperiment
+
+    args = stack_datasets([tasks.channel_equalization(n_symbols, snr_db=24.0,
+                                                      seed=s)
+                           for s in range(r)])
+    base = ExperimentConfig(model=SiliconMR(), n_nodes=n, washout=WASHOUT,
+                            ridge_l2=lams, state_noise_rel=0.0,
+                            state_method="kernel", readout_use_kernel=True)
+    res_m = WDMExperiment(base, r).run(*args)
+    res_s = WDMExperiment(dataclasses.replace(base, stream_chunk_k=chunk),
+                          r).run(*args)
+    res_b = WDMExperiment(dataclasses.replace(base, stream_chunk_k=chunk,
+                                              stream_state_dtype="bfloat16"),
+                          r).run(*args)
+    return {
+        "r": r, "n": n, "n_symbols": n_symbols, "chunk": chunk,
+        "nrmse_materialized": [round(float(v), 6) for v in res_m.nrmse],
+        "nrmse_streamed": [round(float(v), 6) for v in res_s.nrmse],
+        "nrmse_streamed_bf16": [round(float(v), 6) for v in res_b.nrmse],
+        "max_abs_nrmse_diff": float(np.max(np.abs(res_s.nrmse - res_m.nrmse))),
+        "max_abs_ser_diff": float(np.max(np.abs(res_s.ser - res_m.ser))),
+        "bf16_max_abs_nrmse_diff": float(np.max(np.abs(res_b.nrmse - res_s.nrmse))),
+        "bf16_max_abs_ser_diff": float(np.max(np.abs(res_b.ser - res_s.ser))),
+    }
+
+
+def check(report: dict) -> list[str]:
+    """Regression gates (bytes + parity everywhere; wall time on TPU)."""
+    failures = []
+    by_key = {}
+    for e in report["cells"]:
+        s = e["streamed"]
+        by_key[(e["r"], e["k"], e["state_dtype"])] = s
+        where = f"R={e['r']} K={e['k']} dtype={e['state_dtype']}"
+        if s["full_k_state_bytes"]:
+            failures.append(
+                f"streamed WDM path materializes a full-K state tensor at {where}")
+        if s["peak_state_bytes"] > 2 * s["chunk_budget_bytes"]:
+            failures.append(
+                f"streamed peak state bytes {s['peak_state_bytes']} exceed 2x "
+                f"chunk budget {s['chunk_budget_bytes']} at {where}")
+        if (report["config"]["backend"] == "tpu" and e["r"] >= 16
+                and e.get("timed")
+                and s["wall_us"] > e["materialized"]["wall_us"]):
+            failures.append(
+                f"streamed slower than materialized at {where}: "
+                f"{s['wall_us']} vs {e['materialized']['wall_us']} us")
+    for (r, k, dtype), s in by_key.items():
+        if dtype != "bfloat16":
+            continue
+        s32 = by_key.get((r, k, "float32"))
+        if s32 and s["peak_state_bytes"] > 0.6 * s32["peak_state_bytes"]:
+            failures.append(
+                f"bf16 chunks do not halve peak state bytes at R={r} K={k}: "
+                f"{s['peak_state_bytes']} vs f32 {s32['peak_state_bytes']}")
+    for p in report["parity"]:
+        if p["max_abs_nrmse_diff"] > PARITY_TOL or p["max_abs_ser_diff"] > PARITY_TOL:
+            failures.append(
+                f"streamed-vs-materialized WDM parity {p['max_abs_nrmse_diff']:.2e}"
+                f"/{p['max_abs_ser_diff']:.2e} exceeds {PARITY_TOL} at "
+                f"R={p['r']} N={p['n']}")
+        if (p["bf16_max_abs_nrmse_diff"] > BF16_NRMSE_TOL
+                or p["bf16_max_abs_ser_diff"] > BF16_SER_TOL):
+            failures.append(
+                f"bf16-chunk parity {p['bf16_max_abs_nrmse_diff']:.2e}"
+                f"/{p['bf16_max_abs_ser_diff']:.2e} exceeds documented bounds "
+                f"{BF16_NRMSE_TOL}/{BF16_SER_TOL} at R={p['r']} N={p['n']}")
+    return failures
+
+
+def build_report(*, smoke: bool) -> dict:
+    if smoke:
+        # small timed cells + the headline R=64/K=10k cell trace-only (the
+        # acceptance gate of ISSUE 4 must hold at the full operating point;
+        # tracing costs no kernel execution, so N shrinks but R/K do not)
+        cells = []
+        for dtype in (None, "bfloat16"):
+            cells.append(measure_cell(4, 96, n=16, state_dtype=dtype,
+                                      chunk=32, iters=1))
+            cells.append(measure_cell(64, 10000, n=16, state_dtype=dtype,
+                                      timed=False))
+        parity = [parity_cell(r=4, n=24, n_symbols=600, chunk=64,
+                              lams=(1e-4,))]
+    else:
+        cells = [measure_cell(r, k, state_dtype=dtype)
+                 for r in GRID_R for k in GRID_K
+                 for dtype in (None, "bfloat16")]
+        parity = [parity_cell(r=4, n=N_NODES, n_symbols=1800, chunk=128)]
+    return {
+        "config": {"backend": jax.default_backend(), "smoke": smoke,
+                   "n_nodes": N_NODES, "washout": WASHOUT,
+                   "wall_note": "off-TPU walls are interpret-mode functional "
+                                "numbers; byte columns are backend-exact"},
+        "cells": cells,
+        "parity": parity,
+    }
+
+
+def run() -> list[str]:
+    """benchmarks.run section: CSV rows + the JSON artifact."""
+    report = build_report(smoke=False)
+    with open("BENCH_wdm_streaming.json", "w") as fh:
+        json.dump(report, fh, indent=2)
+    failures = check(report)
+    if failures:  # same regression gate as --smoke; run.py reports + exits 1
+        raise AssertionError("wdm_streaming check FAILED: " + "; ".join(failures))
+    rows = []
+    for e in report["cells"]:
+        name = (f"wdm_streaming/R{e['r']}_K{e['k']}_{e['state_dtype']}")
+        rows.append(csv_row(f"{name}/state_bytes_ratio",
+                            f"{e['state_bytes_ratio']:.1f}",
+                            f"mat={e['materialized']['peak_state_bytes']};"
+                            f"stream={e['streamed']['peak_state_bytes']}"))
+        if e.get("timed"):
+            rows.append(csv_row(
+                f"{name}/wall_us",
+                f"{e['streamed']['wall_us']:.0f}",
+                f"materialized={e['materialized']['wall_us']:.0f}"))
+    for p in report["parity"]:
+        rows.append(csv_row("wdm_streaming/parity_max_nrmse_diff",
+                            f"{p['max_abs_nrmse_diff']:.2e}",
+                            f"tol={PARITY_TOL}"))
+        rows.append(csv_row("wdm_streaming/bf16_parity_max_nrmse_diff",
+                            f"{p['bf16_max_abs_nrmse_diff']:.2e}",
+                            f"tol={BF16_NRMSE_TOL}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / trace-only headline cell (CI gate on "
+                         "peak state bytes + WDM parity, f32 and bf16 chunks)")
+    ap.add_argument("--out", default="BENCH_wdm_streaming.json")
+    args = ap.parse_args()
+    report = build_report(smoke=args.smoke)
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(json.dumps(report, indent=2))
+    failures = check(report)
+    if failures:
+        raise SystemExit("wdm_streaming check FAILED: " + "; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

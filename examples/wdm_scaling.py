@@ -1,36 +1,79 @@
-"""Beyond-paper: WDM-multiplexed reservoir ensembles.
+"""Beyond-paper: WDM-multiplexed reservoir ensembles, streamed.
 
 The paper's accelerator processes ONE scalar series through one MR.  A
-chip-scale deployment would wavelength-division multiplex R independent
-channels through the same ring + waveguide (each λ sees independent
-dynamics).  This example shows the accuracy/parallelism trade: an ensemble
-of R reservoirs driven by R delayed copies of the input acts as a deeper
-virtual reservoir, improving NARMA10 NRMSE at constant optical hardware.
+chip-scale deployment would wavelength-division multiplex R channels through
+the same ring + waveguide (each λ sees independent dynamics) — the paper's
+Section VI scaling pitch.  This example shows both WDM workloads on the
+pipeline:
 
-All R channels are generated by ONE vmapped, jit-compiled program
-(repro.pipeline.channel_states) and the concatenated features solved by the
-pipeline's in-graph GCV ridge (repro.pipeline.fit_ridge) — no per-channel
-Python loop.
+1. **Throughput scaling (the streaming WDM subsystem, DESIGN.md §9)** — R
+   independent streams, one per wavelength, each fit with its own readout by
+   ``WDMExperiment``: the whole ensemble runs as ONE jit program whose
+   reservoir is a single per-lane-mask Pallas launch per chunk, and with
+   ``stream_chunk_k`` set the fit + evaluation scan over K-chunks — the
+   [R, K, N] channel-state tensor never exists, so K (stream length) scales
+   past HBM.  ``stream_state_dtype="bfloat16"`` halves chunk HBM traffic.
+
+2. **Accuracy scaling (ensemble readout)** — R delayed copies of one input
+   act as a deeper virtual reservoir: concatenating the per-channel features
+   ([K, R·N]) into one ridge readout improves NARMA10 NRMSE at constant
+   optical hardware (``channel_states`` + ``fit_ridge``).
 
   PYTHONPATH=src python examples/wdm_scaling.py
 """
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import SiliconMR, make_mask, nrmse, tasks
-from repro.pipeline import apply_readout, channel_states, fit_ridge
+from repro.pipeline import (ExperimentConfig, WDMExperiment, apply_readout,
+                            channel_states, fit_ridge)
 
+N = 100        # virtual nodes per wavelength channel
+WASHOUT = 60
+CHUNK_K = 256  # streaming chunk (periods) — peak state memory is O(R·chunk·N)
+LAMS = (1e-10, 1e-8, 1e-6, 1e-4, 1e-2)
+model = SiliconMR()
+
+# ---------------------------------------------------------------------------
+# 1. Throughput scaling: R wavelength channels, per-channel streamed readouts
+# ---------------------------------------------------------------------------
+print("== streaming WDM subsystem: R channels, one delay loop, chunked fit ==")
+base = ExperimentConfig(model=model, n_nodes=N, washout=WASHOUT, ridge_l2=LAMS,
+                        state_noise_rel=0.0, state_method="kernel",
+                        readout_use_kernel=True, stream_chunk_k=CHUNK_K)
+print(f"{'R (WDM channels)':18s} {'chunks':>7s} {'mean NRMSE':>11s} {'worst':>8s}")
+r4_stacks = r4_res = None
+for r in [1, 2, 4, 8]:
+    # each wavelength carries an independent task instance (its own seed)
+    dss = [tasks.narma10(2000, seed=s) for s in range(r)]
+    stacks = tuple(np.stack([getattr(d, f) for d in dss]) for f in
+                   ("inputs_train", "targets_train", "inputs_test",
+                    "targets_test"))
+    res = WDMExperiment(base, r).run(*stacks)
+    if r == 4:
+        r4_stacks, r4_res = stacks, res
+    n_chunks = -(-stacks[0].shape[1] // CHUNK_K)
+    print(f"{r:18d} {n_chunks:7d} {res.nrmse.mean():11.4f} {res.nrmse.max():8.4f}")
+
+# bf16 state chunks: half the HBM round-trip per chunk, documented parity
+res16 = WDMExperiment(dataclasses.replace(base, stream_state_dtype="bfloat16"),
+                      4).run(*r4_stacks)
+print(f"bf16 chunks @ R=4: mean NRMSE {res16.nrmse.mean():.4f} "
+      f"(f32 {r4_res.nrmse.mean():.4f}, drift "
+      f"{np.max(np.abs(res16.nrmse - r4_res.nrmse)):.4f})")
+
+# ---------------------------------------------------------------------------
+# 2. Accuracy scaling: ensemble feature concat (materialized channel_states)
+# ---------------------------------------------------------------------------
+print("\n== ensemble readout: R delayed copies -> one concatenated fit ==")
 ds = tasks.narma10(2000, seed=0)
 lo, ptp = ds.inputs_train.min(), np.ptp(ds.inputs_train)
 jtr = jnp.asarray((ds.inputs_train - lo) / ptp, jnp.float32)
 jte = jnp.asarray((ds.inputs_test - lo) / ptp, jnp.float32)
-
-N = 100  # virtual nodes per wavelength channel
-WASHOUT = 60
-LAMS = (1e-10, 1e-8, 1e-6, 1e-4, 1e-2)
-model = SiliconMR()
 
 print(f"{'R (WDM channels)':18s} {'features':>9s} {'NRMSE':>8s}")
 for r in [1, 2, 4, 8]:
@@ -38,8 +81,8 @@ for r in [1, 2, 4, 8]:
     masks = jnp.stack([make_mask(N, seed=10 + i) for i in range(r)])
     j_tr = jnp.stack([jnp.roll(jtr, i) for i in range(r)])   # [R, K]
     j_te = jnp.stack([jnp.roll(jte, i) for i in range(r)])
-    st_tr = channel_states(model, j_tr, masks)               # [R, K, N]
-    st_te = channel_states(model, j_te, masks, s0=st_tr[:, -1, :])
+    st_tr, s_carry = channel_states(model, j_tr, masks, return_final=True)
+    st_te = channel_states(model, j_te, masks, s0=s_carry)
     xtr = jnp.moveaxis(st_tr, 0, 1).reshape(jtr.shape[0], r * N)  # [K, R·N]
     xte = jnp.moveaxis(st_te, 0, 1).reshape(jte.shape[0], r * N)
 

@@ -5,7 +5,7 @@ from .masking import make_mask, masked_input, mls_sequence, sample_and_hold
 from .metrics import nrmse, ser
 from .nonlinear import MZISine, MackeyGlass, NLModel, SiliconMR, SiliconMRLiteral
 from .readout import Readout, fit_readout
-from .reservoir import generate_states, init_state
+from .reservoir import generate_channel_states, generate_states, init_state
 from . import power, tasks, timing
 
 __all__ = [
@@ -18,6 +18,7 @@ __all__ = [
     "SiliconMR",
     "SiliconMRLiteral",
     "fit_readout",
+    "generate_channel_states",
     "generate_states",
     "init_state",
     "make_mask",

@@ -4,6 +4,14 @@ from __future__ import annotations
 
 import numpy as np
 
+# Variance floor of the NRMSE denominator, shared by the host metric below
+# and both jit evaluation paths (pipeline/experiment.py): one constant so a
+# zero-variance (constant) target yields the same finite value everywhere.
+# 1e-30 is exactly representable in f32 (min normal ~1.2e-38), so the device
+# paths can use it literally — a float64-only floor like 1e-300 would
+# underflow to 0.0 in f32 and reintroduce the host/device disagreement.
+VAR_EPS = 1e-30
+
 
 def nrmse(y_true, y_pred) -> float:
     """Normalised root-mean-square error, paper Eq. (8).
@@ -14,7 +22,7 @@ def nrmse(y_true, y_pred) -> float:
     y_true = np.asarray(y_true, dtype=np.float64)
     y_pred = np.asarray(y_pred, dtype=np.float64)
     var = np.var(y_true)
-    return float(np.sqrt(np.mean((y_true - y_pred) ** 2) / (var + 1e-300)))
+    return float(np.sqrt(np.mean((y_true - y_pred) ** 2) / (var + VAR_EPS)))
 
 
 def ser(symbols_true, symbols_pred) -> float:

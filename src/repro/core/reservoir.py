@@ -86,6 +86,7 @@ def generate_states(
     method: str = "fast",
     block_s: int | None = None,
     return_final: bool = False,
+    state_dtype=None,
 ):
     """DFR states for sample series ``j`` [..., K] -> [..., K, N].
 
@@ -100,6 +101,11 @@ def generate_states(
     kernel's explicit VMEM-carry output rather than a slice of the state
     tensor, so a chunked caller never has to keep the full [..., K, N] block
     alive just to continue from its last period.
+
+    ``state_dtype`` downcasts only the emitted state tensor (e.g. bf16 chunks
+    for the streaming paths, halving chunk HBM traffic — DESIGN.md §9); the
+    final-state carry and all in-scan compute stay in the input dtype, so
+    chunked resume is unaffected by the chunk dtype.
     """
     jb, squeeze = _canon(j)
     n_nodes = int(mask.shape[-1])
@@ -114,7 +120,8 @@ def generate_states(
         from repro.kernels.dfr_scan import ops as dfr_ops
 
         out = dfr_ops.dfr_scan(model, jb, mask, s0b, block_s=block_s,
-                               return_final=return_final)
+                               return_final=return_final,
+                               out_dtype=state_dtype)
         states, s_final = out if return_final else (out, None)
     else:
         u = masked_input(jb, mask)
@@ -125,6 +132,57 @@ def generate_states(
         else:
             raise ValueError(f"unknown method {method!r}")
         s_final = states[:, -1, :] if return_final else None
+        if state_dtype is not None:
+            states = states.astype(state_dtype)
     if squeeze:
         return (states[0], s_final[0]) if return_final else states[0]
+    return (states, s_final) if return_final else states
+
+
+def generate_channel_states(
+    model: NLModel,
+    j: jnp.ndarray,      # [R, K] — one series per wavelength channel
+    masks: jnp.ndarray,  # [R, N] — one MLS mask per channel
+    *,
+    s0: jnp.ndarray | None = None,
+    method: str = "fast",
+    block_s: int | None = None,
+    return_final: bool = False,
+    state_dtype=None,
+):
+    """WDM ensemble states: per-channel masks over per-channel inputs.
+
+    ``j`` [R, K] with ``masks`` [R, N] -> states [R, K, N]; the software
+    analogue of R wavelength channels sharing one physical ring + delay
+    loop (DESIGN.md §2/§9).  Same knob semantics as ``generate_states``:
+    ``s0`` [R, N] resumes each channel's scan, ``return_final=True`` adds
+    the [R, N] carry (the kernel's VMEM-flush output — a chunked caller
+    never keeps the full [R, K, N] block alive), ``state_dtype`` downcasts
+    only the emitted state tensor.
+
+    ``method="kernel"`` rides the Pallas scan's per-lane mask path: each
+    channel is a batch lane with its own [N] mask tile resident in VMEM, so
+    all R channels run as ONE kernel launch.  The jnp paths vmap over
+    channels.
+    """
+    j = jnp.asarray(j, jnp.float32)
+    masks = jnp.asarray(masks, j.dtype)
+    if j.ndim != 2 or masks.ndim != 2 or j.shape[0] != masks.shape[0]:
+        raise ValueError(f"channels mismatch: j {j.shape} vs masks {masks.shape}")
+    if s0 is None:
+        s0 = jnp.zeros((j.shape[0], masks.shape[1]), j.dtype)
+    s0 = jnp.asarray(s0, j.dtype)
+
+    if method == "kernel":
+        from repro.kernels.dfr_scan import ops as dfr_ops
+
+        return dfr_ops.dfr_scan(model, j, masks, s0, block_s=block_s,
+                                return_final=return_final,
+                                out_dtype=state_dtype)
+
+    def one(jr, mr, s0r):
+        return generate_states(model, jr, mr, s0=s0r, method=method,
+                               return_final=True, state_dtype=state_dtype)
+
+    states, s_final = jax.vmap(one)(j, masks, s0)
     return (states, s_final) if return_final else states

@@ -39,6 +39,10 @@ VMEM scratch; every step is elementwise on an [S, L] tile.
 Compute is f32 in-kernel regardless of the I/O dtype (bf16 inputs are
 upcast on load, downcast on store): the recurrence is a long product of
 near-1 factors, where bf16 carries would accumulate error over K·N steps.
+``out_dtype`` downcasts only the *emitted* state tensor (e.g. bf16 chunks
+for the streaming path, halving the HBM write+readback traffic of each
+chunk — DESIGN.md §9); the final-state carry always flushes in the input
+dtype so chunked resume stays bit-exact in f32.
 """
 
 from __future__ import annotations
@@ -88,7 +92,8 @@ def _kernel(model, n_nodes, per_lane,
         fin_ref[...] = s_prev_ref[...].astype(fin_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("model", "block_s", "interpret"))
+@functools.partial(jax.jit, static_argnames=("model", "block_s", "interpret",
+                                             "out_dtype"))
 def dfr_scan_tiled(
     model,
     j: jnp.ndarray,      # [K, S_total, L]
@@ -97,7 +102,9 @@ def dfr_scan_tiled(
     *,
     block_s: int = 8,
     interpret: bool = False,
+    out_dtype=None,      # state-tensor dtype (default: j.dtype); fin stays j.dtype
 ) -> tuple[jnp.ndarray, jnp.ndarray]:  # ([K, N, S_total, L], [N, S_total, L])
+    out_dtype = jnp.dtype(out_dtype) if out_dtype is not None else j.dtype
     k_periods, s_total, lanes = j.shape
     n_nodes = mask.shape[0]
     if s_total % block_s:
@@ -124,7 +131,7 @@ def dfr_scan_tiled(
             pl.BlockSpec((n_nodes, block_s, lanes), lambda b, k: (0, b, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((k_periods, n_nodes, s_total, lanes), j.dtype),
+            jax.ShapeDtypeStruct((k_periods, n_nodes, s_total, lanes), out_dtype),
             jax.ShapeDtypeStruct((n_nodes, s_total, lanes), j.dtype),
         ],
         scratch_shapes=[

@@ -60,8 +60,14 @@ def dfr_scan(
     block_s: int | None = None,
     interpret: bool | None = None,
     return_final: bool = False,
+    out_dtype=None,
 ):
-    """States [B, K, N]; with ``return_final`` also the final state [B, N]."""
+    """States [B, K, N]; with ``return_final`` also the final state [B, N].
+
+    ``out_dtype`` downcasts only the emitted state tensor (bf16 chunks for
+    the streaming path); the final-state carry keeps the input dtype, so
+    chunked resume stays bit-exact regardless of the chunk dtype.
+    """
     if interpret is None:
         interpret = _auto_interpret()
     j = jnp.asarray(j)
@@ -90,7 +96,7 @@ def dfr_scan(
         maskt = mask.reshape(n_nodes, 1)
 
     out, fin = dfr_scan_tiled(model, jt, maskt, s0t, block_s=block_s,
-                              interpret=interpret)
+                              interpret=interpret, out_dtype=out_dtype)
     # [K, N, S, L] -> [B, K, N];  [N, S, L] -> [B, N]
     out = out.reshape(k_periods, n_nodes, s_total * LANES)
     states = jnp.moveaxis(out, -1, 0)[:b]

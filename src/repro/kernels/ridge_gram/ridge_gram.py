@@ -74,10 +74,14 @@ def _kernel(n_t_tiles, has_init, *refs):
         preferred_element_type=jnp.float32,
     )
 
+    # bf16 state chunks keep the target stream f32 (it is O(B·T), not worth
+    # rounding); dot_general needs homogeneous operands, so upcast the lhs
+    # tile in VMEM — the HBM read already happened at the narrow dtype.
     @pl.when(j == 0)
     def _moment():
+        xl_m = xl if xl.dtype == y_ref.dtype else xl.astype(y_ref.dtype)
         c_acc[...] += jax.lax.dot_general(
-            xl, y_ref[0],
+            xl_m, y_ref[0],
             dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )

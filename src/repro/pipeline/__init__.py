@@ -1,21 +1,25 @@
 """Jit-end-to-end batched DFRC experiment pipeline (mask → reservoir →
-ridge readout → metrics) — see experiment.py for the API, ridge.py for the
-in-graph Gram/GCV readout solve."""
+ridge readout → metrics) — see experiment.py for the API (including the WDM
+ensemble entry ``WDMExperiment``), ridge.py for the in-graph Gram/GCV
+readout solve and the streaming (chunk-scan) fits."""
 
-from .experiment import Experiment, ExperimentConfig, ExperimentResult, channel_states
+from .experiment import (Experiment, ExperimentConfig, ExperimentResult,
+                         WDMExperiment, channel_states)
 from .ridge import (apply_readout, fit_ridge, fit_ridge_batched,
-                    fit_ridge_streaming, gram, solve_gcv, solve_gcv_svd,
-                    with_bias)
+                    fit_ridge_streaming, fit_ridge_streaming_wdm, gram,
+                    solve_gcv, solve_gcv_svd, with_bias)
 
 __all__ = [
     "Experiment",
     "ExperimentConfig",
     "ExperimentResult",
+    "WDMExperiment",
     "apply_readout",
     "channel_states",
     "fit_ridge",
     "fit_ridge_batched",
     "fit_ridge_streaming",
+    "fit_ridge_streaming_wdm",
     "gram",
     "solve_gcv",
     "solve_gcv_svd",

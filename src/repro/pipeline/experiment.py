@@ -43,12 +43,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.masking import make_mask, sample_and_hold
+from repro.core.metrics import VAR_EPS
 from repro.core.nonlinear import NLModel, SiliconMR
-from repro.core.reservoir import generate_states
+from repro.core.reservoir import generate_channel_states, generate_states
 from repro.core.tasks import SYMBOLS
 from repro.parallel.sharding import maybe_shard
 
-from .ridge import apply_readout, fit_ridge_batched, fit_ridge_streaming, with_bias
+from .ridge import (apply_readout, fit_ridge_batched, fit_ridge_streaming,
+                    fit_ridge_streaming_wdm, with_bias)
 
 _SYMBOLS = tuple(float(s) for s in SYMBOLS)
 
@@ -91,6 +93,19 @@ class ExperimentConfig:
     #                state block of G (single-pass; the streaming route).
     stream_chunk_k: int | None = None
     state_noise_mode: str = "sampled"
+    # Streaming state-chunk dtype (DESIGN.md §9): "bfloat16" halves the HBM
+    # round-trip of every [B, chunk, N] state block on both streaming scans
+    # (fit and eval).  The chunk-to-chunk carry, targets and Gram
+    # accumulators stay f32, so the scan itself resumes exactly; the emitted
+    # chunks are rounded, which makes parity vs f32 chunks looser (documented
+    # bounds, tests/benchmark) and rounds the train -> test carry too when
+    # the train length is not chunk-aligned (ridge.fit_ridge_streaming note).
+    stream_state_dtype: str = "float32"
+    # collect_y_pred=False switches the evaluation to metrics-only: the
+    # per-chunk predictions are never stacked back into a [B, T_test, C]
+    # block, so a long streamed test set costs O(B·chunk) instead of O(B·T)
+    # — ExperimentResult.y_pred is then None.  Default True for API compat.
+    collect_y_pred: bool = True
     # Pallas tiling knobs (only read by the kernel paths):
     #   kernel_block_s — dfr_scan sublane tile; None = smallest of {1, 2, 4, 8}
     #     covering the batch (a B ≤ 128 sweep pads to 128 lanes, not 1024).
@@ -103,6 +118,14 @@ class ExperimentConfig:
             object.__setattr__(self, "ridge_l2", _as_tuple(self.ridge_l2))
         if self.state_noise_mode not in ("sampled", "diagonal"):
             raise ValueError(f"unknown state_noise_mode {self.state_noise_mode!r}")
+        if self.stream_state_dtype not in ("float32", "bfloat16"):
+            raise ValueError(
+                f"unknown stream_state_dtype {self.stream_state_dtype!r} "
+                "(expected 'float32' or 'bfloat16')")
+        if self.stream_state_dtype != "float32" and self.stream_chunk_k is None:
+            raise ValueError(
+                "stream_state_dtype narrows the *streaming* state chunks; "
+                "set stream_chunk_k (the materialized path keeps f32 states)")
         if self.state_noise_rel:
             if self.stream_chunk_k is not None and self.state_noise_mode != "diagonal":
                 raise ValueError(
@@ -114,6 +137,11 @@ class ExperimentConfig:
                     "state_noise_mode='diagonal' is the streaming-path noise "
                     "model (set stream_chunk_k); the unfused route keeps the "
                     "sampled-noise path")
+
+    @property
+    def _stream_state_dtype_arg(self) -> str | None:
+        """stream_state_dtype as the kernels' ``state_dtype`` argument."""
+        return None if self.stream_state_dtype == "float32" else self.stream_state_dtype
 
     @classmethod
     def from_dfrc(cls, cfg) -> "ExperimentConfig":
@@ -149,10 +177,12 @@ class ExperimentResult:
 
     Single-channel targets (the common case) keep the historical 2-D shapes;
     C > 1 output channels add a trailing channel axis instead of being
-    silently dropped.
+    silently dropped.  ``y_pred`` is None when the run was metrics-only
+    (``collect_y_pred=False``): the streamed evaluation then never stacks
+    the per-chunk predictions back into a [B, T_test, C] block.
     """
 
-    y_pred: np.ndarray      # [B, T_test] (or [B, T_test, C]); quantized iff cfg.quantize
+    y_pred: np.ndarray | None  # [B, T_test] (or [B, T_test, C]); quantized iff cfg.quantize
     nrmse: np.ndarray       # [B]  (mean of per-channel NRMSEs for C > 1)
     ser: np.ndarray         # [B]  (vs 4-PAM quantized predictions)
     lam: np.ndarray         # [B]  selected ridge λ per instance
@@ -160,7 +190,7 @@ class ExperimentResult:
 
     @property
     def batch(self) -> int:
-        return self.y_pred.shape[0]
+        return self.nrmse.shape[0]
 
 
 def _canon_batch(x, name: str) -> jnp.ndarray:
@@ -196,13 +226,31 @@ def _quantize(y: jnp.ndarray) -> jnp.ndarray:
     return sym[jnp.argmin(jnp.abs(y[..., None] - sym), axis=-1)]
 
 
-def _eval_streaming(cfg: ExperimentConfig, mask, j_te, te_tg3, w_fit, s0):
+def _gen_states(cfg: ExperimentConfig, mask, j, *, wdm: bool, s0=None,
+                return_final: bool = False, state_dtype=None):
+    """State generation for both workloads: ``mask`` is [N] broadcast over B
+    task instances (the paper's sweep) or, with ``wdm=True``, [R, N] per-lane
+    masks (one wavelength channel per batch row — DESIGN.md §9)."""
+    gen = generate_channel_states if wdm else generate_states
+    return gen(cfg.model, j, mask, s0=s0, method=cfg.state_method,
+               block_s=cfg.kernel_block_s, return_final=return_final,
+               state_dtype=state_dtype)
+
+
+def _eval_streaming(cfg: ExperimentConfig, mask, j_te, te_tg3, w_fit, s0, *,
+                    wdm: bool = False):
     """Chunked test evaluation: states per chunk, running error accumulators.
 
-    ``te_tg3`` [B, T, C].  Returns (y_raw [B, T, C], err2 [B, C], ser_cnt [B])
-    with err2 = Σ_t (ŷ − y)² and ser_cnt the count of 4-PAM symbol
-    mismatches, both accumulated inside the chunk scan so no [B, T, N] state
-    block is ever resident (DESIGN.md §8).
+    ``te_tg3`` [B, T, C].  Returns (y_raw [B, T, C] or None, acc) where acc
+    packs the running error statistics (err2 = Σ_t (ŷ − y)², the 4-PAM
+    symbol-mismatch count, and target Σy/Σy² for the variance), all
+    accumulated inside the chunk scan so neither a [B, T, N] state block nor
+    any other full-stream reduction is resident (DESIGN.md §8) — the target
+    variance in particular is derived from the in-scan moments, not a
+    ``jnp.var`` pass over the full target block.  With
+    ``cfg.collect_y_pred=False`` the per-chunk predictions are consumed by
+    the accumulators and dropped — the scan stacks nothing, so the O(B·T·C)
+    prediction block never exists either (metrics-only mode).
     """
     from .ridge import _chunk_axis, _chunk_layout
 
@@ -213,37 +261,75 @@ def _eval_streaming(cfg: ExperimentConfig, mask, j_te, te_tg3, w_fit, s0):
     jp = jnp.pad(j_te, ((0, 0), (0, t_padded - t_total)))
     yp = jnp.pad(te_tg3, ((0, 0), (0, t_padded - t_total), (0, 0)))
 
+    # Variance accumulators are *shifted* by the stream's first sample: the
+    # single-pass E[y²] − E[y]² identity cancels catastrophically in f32
+    # when |mean| ≫ std (e.g. a narrow signal riding a large offset), but
+    # applied to d = y − y[0] the cancellation is against ~std², not mean².
+    # y[0] is one [B, C] gather, not a full-stream pass.
+    shift = te_tg3[:, 0, :]                          # [B, C]
     carry0 = (jnp.asarray(s0, jnp.float32),
-              jnp.zeros((b, c_cols), jnp.float32),
-              jnp.zeros((b,), jnp.float32))
+              jnp.zeros((b, c_cols), jnp.float32),   # Σ (ŷ − y)²
+              jnp.zeros((b,), jnp.float32),          # symbol mismatches
+              jnp.zeros((b, c_cols), jnp.float32),   # Σ (y − y₀)
+              jnp.zeros((b, c_cols), jnp.float32))   # Σ (y − y₀)²
     xs = (_chunk_axis(jp, n_chunks, chunk_k),
           _chunk_axis(yp, n_chunks, chunk_k),
           jnp.arange(n_chunks, dtype=jnp.int32) * chunk_k)
 
     def body(carry, chunk):
-        s, err2, ser_cnt = carry
+        s, err2, ser_cnt, y_sum, y_sq = carry
         j_c, y_c, t_start = chunk
-        states, s = generate_states(cfg.model, j_c, mask, s0=s,
-                                    method=cfg.state_method,
-                                    block_s=cfg.kernel_block_s,
-                                    return_final=True)
-        y_hat = jnp.einsum("btf,bfc->btc", with_bias(states), w_fit)
+        states, s = _gen_states(cfg, mask, j_c, wdm=wdm, s0=s,
+                                return_final=True,
+                                state_dtype=cfg._stream_state_dtype_arg)
+        y_hat = jnp.einsum("btf,bfc->btc", with_bias(states), w_fit,
+                           preferred_element_type=jnp.float32)
         tidx = t_start + jnp.arange(chunk_k, dtype=jnp.int32)
         valid = (tidx < t_total).astype(jnp.float32)[None, :, None]
         err = (y_hat - y_c) * valid
         err2 = err2 + jnp.sum(err * err, axis=1)
         mism = (_quantize(y_hat) != _quantize(y_c)) & (valid > 0)
         ser_cnt = ser_cnt + jnp.sum(mism.astype(jnp.float32), axis=(1, 2))
-        return (s, err2, ser_cnt), y_hat
+        yv = (y_c - shift[:, None, :]) * valid
+        y_sum = y_sum + jnp.sum(yv, axis=1)
+        y_sq = y_sq + jnp.sum(yv * yv, axis=1)
+        return (s, err2, ser_cnt, y_sum, y_sq), (
+            y_hat if cfg.collect_y_pred else None)
 
-    (_, err2, ser_cnt), y_chunks = jax.lax.scan(body, carry0, xs)
+    (_, *acc), y_chunks = jax.lax.scan(body, carry0, xs)
+    if not cfg.collect_y_pred:
+        return None, acc
     y_raw = jnp.moveaxis(y_chunks, 0, 1).reshape(b, t_padded, c_cols)[:, :t_total]
-    return y_raw, err2, ser_cnt
+    return y_raw, acc
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg):
-    """The whole experiment as one XLA program.  All arrays [B, T*]."""
+def _streaming_metrics(acc, t_test: int, *, channel_axis: bool):
+    """NRMSE/SER from the running accumulators — same conventions as the
+    materialized path: per-channel NRMSE (that channel's variance, computed
+    from the in-scan shifted Σ(y−y₀)/Σ(y−y₀)² moments — variance is
+    shift-invariant) then channel-mean; SER over quantized-vs-quantized
+    symbols."""
+    err2, ser_cnt, y_sum, y_sq = acc
+    mean = y_sum / t_test
+    var = jnp.maximum(y_sq / t_test - mean * mean, 0.0)   # [B, C]
+    nrmse_ch = jnp.sqrt((err2 / t_test) / (var + VAR_EPS))
+    nrmse = jnp.mean(nrmse_ch, axis=-1) if channel_axis else nrmse_ch[:, 0]
+    ser = ser_cnt / (t_test * err2.shape[-1])
+    return nrmse, ser
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "wdm"))
+def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg,
+                  wdm: bool = False):
+    """The whole experiment as one XLA program.  All arrays [B, T*].
+
+    ``wdm=True`` runs the WDM ensemble workload: the batch axis is R
+    wavelength channels and ``mask`` is a per-channel [R, N] stack — state
+    generation swaps to the per-lane-mask path (``generate_channel_states``,
+    one Pallas launch for all channels) and the streamed fit to
+    ``fit_ridge_streaming_wdm``; everything else (input layer, readout
+    solve, metrics) is the same program.
+    """
     # -- input layer: per-instance normalisation + sample-and-hold + gain ----
     if cfg.normalize_input:
         lo = jnp.min(tr_in, axis=1, keepdims=True)
@@ -256,40 +342,33 @@ def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg):
     j_te = maybe_shard(j_te, ("pod", "data"))
 
     if cfg.stream_chunk_k is not None:
-        # -- streaming fused path (DESIGN.md §8): reservoir chunks feed the
-        # accumulate-into Gram kernel inside ONE lax.scan; test evaluation
-        # streams too.  The [B, T, N] state tensor never exists.
-        w_fit, lam_idx, s_carry = fit_ridge_streaming(
+        # -- streaming fused path (DESIGN.md §8/§9): reservoir chunks feed
+        # the accumulate-into Gram kernel inside ONE lax.scan; test
+        # evaluation streams too.  The [B, T, N] state tensor never exists.
+        fit = fit_ridge_streaming_wdm if wdm else fit_ridge_streaming
+        w_fit, lam_idx, s_carry = fit(
             cfg.model, mask, j_tr, tr_tg, washout=cfg.washout,
             chunk_k=cfg.stream_chunk_k, lambdas=cfg.ridge_l2,
             state_method=cfg.state_method, block_s=cfg.kernel_block_s,
             use_kernel=cfg.readout_use_kernel, block_t=cfg.readout_block_t,
+            state_dtype=cfg._stream_state_dtype_arg,
             noise_rel=(cfg.state_noise_rel
                        if cfg.state_noise_mode == "diagonal" else 0.0))
         te_tg3 = te_tg[..., None] if te_tg.ndim == 2 else te_tg
-        y_raw3, err2, ser_cnt = _eval_streaming(cfg, mask, j_te, te_tg3,
-                                                w_fit, s_carry)
-        t_test = te_tg3.shape[1]
-        # Same metric conventions as the materialized path below, evaluated
-        # from the running accumulators: per-channel NRMSE then channel-mean;
-        # SER on quantized-vs-quantized symbols.
-        var = jnp.var(te_tg3, axis=1)                  # [B, C]
-        nrmse_ch = jnp.sqrt((err2 / t_test) / (var + 1e-30))
-        nrmse = jnp.mean(nrmse_ch, axis=-1) if te_tg.ndim == 3 else nrmse_ch[:, 0]
-        ser = ser_cnt / (t_test * te_tg3.shape[-1])
-        y_raw = y_raw3 if te_tg.ndim == 3 else y_raw3[..., 0]
-        y_sym = _quantize(y_raw)
+        y_raw3, acc = _eval_streaming(cfg, mask, j_te, te_tg3,
+                                      w_fit, s_carry, wdm=wdm)
+        nrmse, ser = _streaming_metrics(acc, te_tg3.shape[1],
+                                        channel_axis=te_tg.ndim == 3)
         lam = jnp.asarray(cfg.ridge_l2, jnp.float32)[lam_idx]
-        y_out = y_sym if cfg.quantize else y_raw
+        if y_raw3 is None:
+            return None, nrmse, ser, lam, w_fit
+        y_raw = y_raw3 if te_tg.ndim == 3 else y_raw3[..., 0]
+        y_out = _quantize(y_raw) if cfg.quantize else y_raw
         return y_out, nrmse, ser, lam, w_fit
 
     # -- reservoir layer: batched state generation, carry train -> test ------
-    st_tr, s_carry = generate_states(cfg.model, j_tr, mask,
-                                     method=cfg.state_method,
-                                     block_s=cfg.kernel_block_s,
-                                     return_final=True)
-    st_te = generate_states(cfg.model, j_te, mask, s0=s_carry,
-                            method=cfg.state_method, block_s=cfg.kernel_block_s)
+    st_tr, s_carry = _gen_states(cfg, mask, j_tr, wdm=wdm, return_final=True)
+    st_te = _gen_states(cfg, mask, j_te, wdm=wdm, s0=s_carry)
     st_tr = maybe_shard(st_tr, ("pod", "data"))
     st_te = maybe_shard(st_te, ("pod", "data"))
 
@@ -318,7 +397,7 @@ def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg):
     # T only), then channel-mean — a pooled T×C reduction would let a
     # high-variance channel mask total failure on a low-variance one.
     var = jnp.var(te_tg, axis=1)                       # [B(, C)]
-    nrmse_ch = jnp.sqrt(jnp.mean(err * err, axis=1) / (var + 1e-30))
+    nrmse_ch = jnp.sqrt(jnp.mean(err * err, axis=1) / (var + VAR_EPS))
     nrmse = nrmse_ch if nrmse_ch.ndim == 1 else jnp.mean(nrmse_ch, axis=-1)
     # SER on quantized-vs-quantized symbols: targets that round-tripped
     # through a wider dtype (f64 task gen -> f32 canon) may sit eps off the
@@ -326,7 +405,22 @@ def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg):
     ser = jnp.mean((y_sym != _quantize(te_tg)).astype(jnp.float32), axis=inst_axes)
     lam = jnp.asarray(cfg.ridge_l2, jnp.float32)[lam_idx]
     y_out = y_sym if cfg.quantize else y_raw
+    if not cfg.collect_y_pred:
+        return None, nrmse, ser, lam, w_fit
     return y_out, nrmse, ser, lam, w_fit
+
+
+def _pack_result(y, nrmse, ser, lam, w) -> ExperimentResult:
+    """Device outputs -> host ExperimentResult (shared by both experiments)."""
+    # w is [B, N + 1, C]; drop the channel axis only when there is a
+    # single output channel (C > 1 used to be silently truncated here).
+    w = np.asarray(w)
+    if w.shape[-1] == 1:
+        w = w[..., 0]
+    return ExperimentResult(
+        y_pred=None if y is None else np.asarray(y),
+        nrmse=np.asarray(nrmse), ser=np.asarray(ser),
+        lam=np.asarray(lam), readout_w=w)
 
 
 class Experiment:
@@ -364,14 +458,7 @@ class Experiment:
                 f"test {te_in.shape}/{te_tg.shape}")
         y, nrmse, ser, lam, w = _run_pipeline(
             self.config, self.mask, tr_in, tr_tg, te_in, te_tg)
-        # w is [B, N + 1, C]; drop the channel axis only when there is a
-        # single output channel (C > 1 used to be silently truncated here).
-        w = np.asarray(w)
-        if w.shape[-1] == 1:
-            w = w[..., 0]
-        return ExperimentResult(
-            y_pred=np.asarray(y), nrmse=np.asarray(nrmse), ser=np.asarray(ser),
-            lam=np.asarray(lam), readout_w=w)
+        return _pack_result(y, nrmse, ser, lam, w)
 
     def run_dataset(self, ds) -> ExperimentResult:
         """Convenience for a core.tasks Dataset (single instance, B = 1)."""
@@ -379,10 +466,12 @@ class Experiment:
                         ds.inputs_test, ds.targets_test)
 
 
-@functools.partial(jax.jit, static_argnames=("model", "method", "block_s"))
+@functools.partial(jax.jit, static_argnames=("model", "method", "block_s",
+                                             "return_final", "state_dtype"))
 def channel_states(model: NLModel, j: jnp.ndarray, masks: jnp.ndarray, *,
                    s0: jnp.ndarray | None = None, method: str = "fast",
-                   block_s: int | None = None) -> jnp.ndarray:
+                   block_s: int | None = None, return_final: bool = False,
+                   state_dtype=None):
     """WDM ensemble states: per-channel masks over per-channel inputs.
 
     ``j`` [R, K] (one series per wavelength channel), ``masks`` [R, N] ->
@@ -391,26 +480,85 @@ def channel_states(model: NLModel, j: jnp.ndarray, masks: jnp.ndarray, *,
     parallel — the software analogue of R wavelengths sharing the physical
     ring.
 
+    Jitted wrapper over ``core.reservoir.generate_channel_states`` with full
+    ``generate_states`` knob parity (DESIGN.md §9): ``return_final=True``
+    adds the [R, N] carry (on the kernel path the VMEM-flush output, so a
+    chunked caller never keeps the full [R, K, N] block alive just to
+    resume), ``state_dtype`` narrows the emitted state tensor (bf16 chunks).
+
     ``method="kernel"`` rides the Pallas scan's per-lane mask path: each
     wavelength channel is a batch lane with its own [N] mask tile resident
     in VMEM (kernels/dfr_scan per-lane BlockSpec), so all R channels still
     run as ONE kernel launch — no per-channel vmap over ``pallas_call``.
     The jnp paths ("fast"/"ref") vmap over channels as before.
     """
-    j = jnp.asarray(j, jnp.float32)
-    masks = jnp.asarray(masks, j.dtype)
-    if j.shape[0] != masks.shape[0]:
-        raise ValueError(f"channels mismatch: j {j.shape} vs masks {masks.shape}")
-    if s0 is None:
-        s0 = jnp.zeros((j.shape[0], masks.shape[1]), j.dtype)
+    return generate_channel_states(model, j, masks, s0=s0, method=method,
+                                   block_s=block_s, return_final=return_final,
+                                   state_dtype=state_dtype)
 
-    if method == "kernel":
-        from repro.kernels.dfr_scan import ops as dfr_ops
 
-        return dfr_ops.dfr_scan(model, j, masks, jnp.asarray(s0, j.dtype),
-                                block_s=block_s)
+class WDMExperiment:
+    """WDM ensemble experiment: R wavelength channels, one delay loop.
 
-    def one(jr, mr, s0r):
-        return generate_states(model, jr, mr, s0=s0r, method=method)
+    The chip-scale scaling scenario of the paper (Section VI): R microring
+    wavelength channels share one physical delay loop, each carrying an
+    independent input stream against its own MLS mask, each with its own
+    readout — R× the throughput of one accelerator at constant optical
+    hardware.  Software-side this is ``Experiment`` with the batch axis
+    reinterpreted as channels and a per-channel [R, N] mask stack
+    (DESIGN.md §9); with ``config.stream_chunk_k`` set, the run streams:
+    the fit is ``fit_ridge_streaming_wdm`` (ONE chunk scan, per-channel
+    Gram stacks, no [R, K, N] state tensor ever resident) and the test
+    evaluation runs chunked with running NRMSE/SER accumulators — long WDM
+    streams (K ≫ chunk) no longer fall back to O(R·K·N) memory.
 
-    return jax.vmap(one)(j, masks, s0)
+    >>> cfg = ExperimentConfig(n_nodes=100, stream_chunk_k=512)
+    >>> res = WDMExperiment(cfg, n_channels=16).run(tr_in, tr_tg, te_in, te_tg)
+    >>> res.nrmse                                    # [R] — per channel
+
+    Channel masks default to ``make_mask(n_nodes, seed=mask_seed + r)``;
+    pass ``masks`` [R, N] to override.
+    """
+
+    def __init__(self, config: ExperimentConfig, n_channels: int, *,
+                 masks: jnp.ndarray | None = None):
+        if n_channels < 1:
+            raise ValueError(f"n_channels must be >= 1, got {n_channels}")
+        self.config = config
+        self.n_channels = n_channels
+        if masks is None:
+            masks = jnp.stack([
+                make_mask(config.n_nodes, levels=config.mask_levels,
+                          seed=config.mask_seed + r)
+                for r in range(n_channels)])
+        else:
+            masks = jnp.asarray(masks, jnp.float32)
+        if masks.shape != (n_channels, config.n_nodes):
+            raise ValueError(
+                f"masks {masks.shape} do not match (R, N) = "
+                f"({n_channels}, {config.n_nodes})")
+        self.masks = masks
+
+    def run(self, inputs_train, targets_train, inputs_test, targets_test) -> ExperimentResult:
+        """Fit per-channel readouts and evaluate, one channel per batch row.
+
+        Inputs are [R, K] (R = ``n_channels``); targets may carry a trailing
+        output-channel axis ([R, K, C]).  Result arrays are per wavelength
+        channel: ``nrmse``/``ser``/``lam`` [R], ``readout_w`` [R, N + 1(, C)].
+        """
+        tr_in = _canon_batch(inputs_train, "inputs_train")
+        te_in = _canon_batch(inputs_test, "inputs_test")
+        tr_tg = _canon_targets(targets_train, "targets_train", tr_in)
+        te_tg = _canon_targets(targets_test, "targets_test", te_in)
+        if tr_in.shape[0] != self.n_channels or te_in.shape[0] != self.n_channels:
+            raise ValueError(
+                f"expected {self.n_channels} channel rows, got train "
+                f"{tr_in.shape} / test {te_in.shape}")
+        if tr_tg.ndim != te_tg.ndim or (
+                tr_tg.ndim == 3 and tr_tg.shape[-1] != te_tg.shape[-1]):
+            raise ValueError(
+                f"inconsistent target shapes: train {tr_tg.shape}, "
+                f"test {te_tg.shape}")
+        y, nrmse, ser, lam, w = _run_pipeline(
+            self.config, self.masks, tr_in, tr_tg, te_in, te_tg, wdm=True)
+        return _pack_result(y, nrmse, ser, lam, w)

@@ -96,3 +96,15 @@ def count_scans(closed_jaxpr) -> int:
     """Number of ``lax.scan`` equations (pallas kernel bodies excluded)."""
     return sum(1 for eqn in walk_eqns(closed_jaxpr.jaxpr)
                if eqn.primitive.name == "scan")
+
+
+def count_pallas_calls(closed_jaxpr) -> int:
+    """Number of ``pallas_call`` equations anywhere in the program.
+
+    The WDM streaming guard uses this to pin the per-lane-mask claim
+    (DESIGN.md §9): all R wavelength channels run as ONE dfr_scan launch
+    plus ONE accumulate-into Gram launch per chunk-scan body — a program
+    that vmapped ``pallas_call`` per channel would show R× the count.
+    """
+    return sum(1 for eqn in walk_eqns(closed_jaxpr.jaxpr)
+               if eqn.primitive.name == "pallas_call")

@@ -37,7 +37,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.reservoir import generate_states
+from repro.core.reservoir import generate_channel_states, generate_states
 from repro.parallel.sharding import maybe_shard
 
 
@@ -222,79 +222,61 @@ def _chunk_axis(x: jnp.ndarray, n_chunks: int, chunk_k: int) -> jnp.ndarray:
     return jnp.moveaxis(x.reshape(b, n_chunks, chunk_k, *x.shape[2:]), 1, 0)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "model", "washout", "chunk_k", "lambdas", "state_method", "block_s",
-    "use_kernel", "block_t", "block_f", "noise_rel"))
-def fit_ridge_streaming(
-    model,
-    mask: jnp.ndarray,     # [N]
-    j: jnp.ndarray,        # [B, K] sample-and-held input stream
-    targets: jnp.ndarray,  # [B, K] or [B, K, C]
-    *,
-    washout: int,
-    chunk_k: int,
-    lambdas: tuple[float, ...] = (1e-6,),
-    state_method: str = "kernel",
-    block_s: int | None = None,
-    use_kernel: bool = True,
-    block_t: int = 512,
-    block_f: int = 128,
-    noise_rel: float = 0.0,
-    s0: jnp.ndarray | None = None,
-):
-    """Streaming fused reservoir -> readout fit: states never fully resident.
-
-    ONE ``lax.scan`` over ``ceil(K / chunk_k)`` chunks; each iteration runs
-    the reservoir for ``chunk_k`` periods (resuming bit-exactly from the
-    carried final state), masks washout/padding rows to zero, appends the
-    bias column, and folds the chunk into running per-instance Gram stacks
-    (G [B, F, F], c [B, F, C], F = N + 1) — via the accumulate-into Pallas
-    kernel (``use_kernel=True``, carried in feature-padded [B, Fp, Fp] form
-    so no per-chunk pad/slice copies of G) or a plain einsum.  Peak live
-    state memory is O(B·chunk_k·N); the [B, K, N] state tensor of the
-    materialized path never exists.
-
-    The solve is necessarily the Gram/eigh route (``solve_gcv``): running
-    (G, c, ‖y‖²) statistics are all a streaming fit ever holds, and the
-    better-conditioned SVD-of-X solve needs X resident.  Parity targets are
-    therefore the materialized *Gram* fit (``fit_ridge_batched(use_kernel=
-    True)``); vs the SVD default the last decade of λ-conditioning can
-    differ (see ``solve_gcv_svd``).
-
-    ``noise_rel`` > 0 applies the digitiser noise of the materialized path
-    in expectation, without a second pass over the stream: for i.i.d. state
-    noise ε with σ = noise_rel·std(states over the fit window),
-
-        E[(X+ε)ᵀ(X+ε)] = XᵀX + σ²·T_fit·I,   E[(X+ε)ᵀy] = Xᵀy,
-
-    so the fit adds σ²·T_fit to the N state-feature diagonal entries of G
-    (not the bias), with σ estimated from in-scan sum/sum-of-squares
-    accumulators over the same fit window.  This is
-    ``ExperimentConfig.state_noise_mode="diagonal"``; the sampled-noise path
-    stays available on the unfused route.
-
-    Returns ``(w [B, F, C], lam_idx [B], s_end [B, N])`` where ``s_end`` is
-    the reservoir state after period K - 1 (the train -> test carry), exact
-    even when K is not a multiple of ``chunk_k``.
-    """
+def _canon_stream(j, targets):
+    """Canonicalise a (j, targets) stream pair to ([B, K], [B, K, C])."""
     j = jnp.asarray(j, jnp.float32)
     if j.ndim == 1:
         j = j[None, :]
-    b, k_total = j.shape
     y = jnp.asarray(targets, jnp.float32)
     if y.ndim == 1:
         y = y[None, :]
     if y.ndim == 2:
         y = y[..., None]
-    if y.shape[:2] != (b, k_total):
-        raise ValueError(f"targets {y.shape} do not match inputs ({b}, {k_total})")
-    n = int(mask.shape[-1])
+    if y.shape[:2] != j.shape:
+        raise ValueError(f"targets {y.shape} do not match inputs {j.shape}")
+    return j, y
+
+
+def _fit_streaming_core(
+    states_fn,             # (j_chunk [B, chunk], s [B, N] f32) -> (states, s_next)
+    n: int,                # nodes per instance/channel
+    j: jnp.ndarray,        # [B, K] canonicalised stream
+    y: jnp.ndarray,        # [B, K, C] canonicalised targets
+    *,
+    washout: int,
+    chunk_k: int,
+    lambdas: tuple[float, ...],
+    use_kernel: bool,
+    block_t: int,
+    block_f: int,
+    noise_rel: float,
+    state_dtype,
+    s0: jnp.ndarray | None,
+):
+    """The shared chunk-scan of both streaming fits (DESIGN.md §8/§9).
+
+    ``states_fn`` is the only degree of freedom between the single-mask fit
+    (``fit_ridge_streaming``: one mask broadcast over B task instances) and
+    the WDM fit (``fit_ridge_streaming_wdm``: per-channel masks, B = R
+    wavelength channels) — everything downstream of state generation (washout
+    row-masking, bias fold, Gram accumulation, noise-as-Tikhonov, the GCV
+    solve) is identical, so it lives here once.
+
+    ``state_dtype`` (e.g. bf16) applies to the emitted state *chunks* only:
+    the reservoir carry between chunks stays f32 (resume is unaffected), the
+    Gram/moment accumulators stay f32 (MXU partials via
+    ``preferred_element_type``), and the target stream stays f32 — only the
+    [B, chunk, F] block that round-trips through HBM per chunk narrows, which
+    is where the traffic is.
+    """
+    b, k_total = j.shape
     f = n + 1
     c_cols = y.shape[-1]
     if k_total <= washout:
         raise ValueError(f"stream length {k_total} <= washout {washout}")
     t_fit = k_total - washout
     n_chunks, k_padded = _chunk_layout(k_total, chunk_k)
+    sdt = jnp.dtype(state_dtype if state_dtype is not None else jnp.float32)
 
     interpret = jax.default_backend() != "tpu"
     if use_kernel:
@@ -302,6 +284,10 @@ def fit_ridge_streaming(
         from repro.kernels.ridge_gram.ridge_gram import gram_tiled_batched_into
 
         eff_bt = effective_block_t(chunk_k, block_t)
+        if sdt.itemsize < 4:
+            # sub-f32 chunks need a 16-row sublane tile (bf16 min tile is
+            # (16, 128)); round the T tile up and let padding absorb it.
+            eff_bt = -(-eff_bt // 16) * 16
         chunk_pt = chunk_k + (-chunk_k % eff_bt)
         fq = f + (-f % block_f)
     else:
@@ -328,19 +314,19 @@ def fit_ridge_streaming(
     def body(carry, chunk):
         s, g, cvec, y2, ssum, ssq, s_end = carry
         j_c, y_c, k_start = chunk
-        states, s_next = generate_states(model, j_c, mask, s0=s,
-                                         method=state_method, block_s=block_s,
-                                         return_final=True)
+        states, s_next = states_fn(j_c, s)
         tidx = k_start + jnp.arange(chunk_k, dtype=jnp.int32)
         vfit = ((tidx >= washout) & (tidx < k_total)).astype(jnp.float32)
 
         x = jnp.concatenate(
             [states, jnp.ones((b, chunk_k, 1), states.dtype)], axis=-1)
-        x = x * vfit[None, :, None]            # washout/padding rows -> zero
+        # washout/padding rows -> zero; keep the mask in the chunk dtype so a
+        # bf16 chunk is not silently promoted back to f32 by the multiply
+        x = x * vfit.astype(x.dtype)[None, :, None]
         yv = y_c * vfit[None, :, None]
         y2 = y2 + jnp.sum(yv * yv, axis=(1, 2))
         if noise_rel:
-            sv = states * vfit[None, :, None]
+            sv = states.astype(jnp.float32) * vfit[None, :, None]
             ssum = ssum + jnp.sum(sv, axis=(1, 2))
             ssq = ssq + jnp.sum(sv * sv, axis=(1, 2))
 
@@ -350,16 +336,22 @@ def fit_ridge_streaming(
             g, cvec = gram_tiled_batched_into(g, cvec, xq, yq, block_t=eff_bt,
                                               block_f=block_f, interpret=interpret)
         else:
-            g = g + jnp.einsum("btf,btg->bfg", x, x)
-            cvec = cvec + jnp.einsum("btf,btc->bfc", x, yv)
+            g = g + jnp.einsum("btf,btg->bfg", x, x,
+                               preferred_element_type=jnp.float32)
+            cvec = cvec + jnp.einsum("btf,btc->bfc", x, yv,
+                                     preferred_element_type=jnp.float32)
 
         # State after period K - 1 (this chunk's padded tail, if any, keeps
         # evolving on zero input — the carry must come from the last *real*
-        # period, not the end of the chunk).
+        # period, not the end of the chunk).  When the last real period sits
+        # exactly at the chunk end, prefer the f32 VMEM carry over the state
+        # tensor: with bf16 chunks the tensor is rounded, the carry is not.
         in_chunk = (k_start <= k_total - 1) & (k_total - 1 < k_start + chunk_k)
+        at_chunk_end = k_total - 1 == k_start + chunk_k - 1
         last_local = jnp.clip(k_total - 1 - k_start, 0, chunk_k - 1)
         s_k = jax.lax.dynamic_index_in_dim(states, last_local, axis=1,
-                                           keepdims=False)
+                                           keepdims=False).astype(jnp.float32)
+        s_k = jnp.where(at_chunk_end, s_next, s_k)
         s_end = jnp.where(in_chunk, s_k, s_end)
         return (s_next, g, cvec, y2, ssum, ssq, s_end), None
 
@@ -379,3 +371,137 @@ def fit_ridge_streaming(
     w, idx = jax.vmap(
         lambda gb, cb, y2b: solve_gcv(gb, cb, y2b, t_fit, lams))(g, cvec, y2)
     return w, idx, s_end
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "model", "washout", "chunk_k", "lambdas", "state_method", "block_s",
+    "use_kernel", "block_t", "block_f", "noise_rel", "state_dtype"))
+def fit_ridge_streaming(
+    model,
+    mask: jnp.ndarray,     # [N]
+    j: jnp.ndarray,        # [B, K] sample-and-held input stream
+    targets: jnp.ndarray,  # [B, K] or [B, K, C]
+    *,
+    washout: int,
+    chunk_k: int,
+    lambdas: tuple[float, ...] = (1e-6,),
+    state_method: str = "kernel",
+    block_s: int | None = None,
+    use_kernel: bool = True,
+    block_t: int = 512,
+    block_f: int = 128,
+    noise_rel: float = 0.0,
+    state_dtype=None,
+    s0: jnp.ndarray | None = None,
+):
+    """Streaming fused reservoir -> readout fit: states never fully resident.
+
+    ONE ``lax.scan`` over ``ceil(K / chunk_k)`` chunks; each iteration runs
+    the reservoir for ``chunk_k`` periods (resuming bit-exactly from the
+    carried final state), masks washout/padding rows to zero, appends the
+    bias column, and folds the chunk into running per-instance Gram stacks
+    (G [B, F, F], c [B, F, C], F = N + 1) — via the accumulate-into Pallas
+    kernel (``use_kernel=True``, carried in feature-padded [B, Fp, Fp] form
+    so no per-chunk pad/slice copies of G) or a plain einsum.  Peak live
+    state memory is O(B·chunk_k·N); the [B, K, N] state tensor of the
+    materialized path never exists.  ``state_dtype`` (e.g. ``"bfloat16"``)
+    narrows the emitted state chunks, halving their HBM round-trip; carry
+    and accumulators stay f32 (DESIGN.md §9 bounds the accuracy cost).
+
+    The solve is necessarily the Gram/eigh route (``solve_gcv``): running
+    (G, c, ‖y‖²) statistics are all a streaming fit ever holds, and the
+    better-conditioned SVD-of-X solve needs X resident.  Parity targets are
+    therefore the materialized *Gram* fit (``fit_ridge_batched(use_kernel=
+    True)``); vs the SVD default the last decade of λ-conditioning can
+    differ (see ``solve_gcv_svd``).
+
+    ``noise_rel`` > 0 applies the digitiser noise of the materialized path
+    in expectation, without a second pass over the stream: for i.i.d. state
+    noise ε with σ = noise_rel·std(states over the fit window),
+
+        E[(X+ε)ᵀ(X+ε)] = XᵀX + σ²·T_fit·I,   E[(X+ε)ᵀy] = Xᵀy,
+
+    so the fit adds σ²·T_fit to the N state-feature diagonal entries of G
+    (not the bias), with σ estimated from in-scan sum/sum-of-squares
+    accumulators over the same fit window.  This is
+    ``ExperimentConfig.state_noise_mode="diagonal"``; the sampled-noise path
+    stays available on the unfused route.
+
+    Returns ``(w [B, F, C], lam_idx [B], s_end [B, N])`` where ``s_end`` is
+    the reservoir state after period K - 1 (the train -> test carry), exact
+    even when K is not a multiple of ``chunk_k`` — except that with a
+    sub-f32 ``state_dtype`` AND a ragged tail (K % chunk_k != 0) the carry
+    is read from the rounded state chunk (the f32 VMEM carry describes the
+    chunk *end*, which is past period K - 1); chunk-aligned K keeps it
+    f32-exact (DESIGN.md §9).
+    """
+    j, y = _canon_stream(j, targets)
+
+    def states_fn(j_c, s):
+        return generate_states(model, j_c, mask, s0=s, method=state_method,
+                               block_s=block_s, return_final=True,
+                               state_dtype=state_dtype)
+
+    return _fit_streaming_core(
+        states_fn, int(mask.shape[-1]), j, y, washout=washout, chunk_k=chunk_k,
+        lambdas=lambdas, use_kernel=use_kernel, block_t=block_t,
+        block_f=block_f, noise_rel=noise_rel, state_dtype=state_dtype, s0=s0)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "model", "washout", "chunk_k", "lambdas", "state_method", "block_s",
+    "use_kernel", "block_t", "block_f", "noise_rel", "state_dtype"))
+def fit_ridge_streaming_wdm(
+    model,
+    masks: jnp.ndarray,    # [R, N] — one MLS mask per wavelength channel
+    j: jnp.ndarray,        # [R, K] — one sample-and-held stream per channel
+    targets: jnp.ndarray,  # [R, K] or [R, K, C]
+    *,
+    washout: int,
+    chunk_k: int,
+    lambdas: tuple[float, ...] = (1e-6,),
+    state_method: str = "kernel",
+    block_s: int | None = None,
+    use_kernel: bool = True,
+    block_t: int = 512,
+    block_f: int = 128,
+    noise_rel: float = 0.0,
+    state_dtype=None,
+    s0: jnp.ndarray | None = None,
+):
+    """Streaming readout fit for a WDM ensemble: per-channel masks, one scan.
+
+    The WDM workload (paper Section VI; DESIGN.md §9) is R microring
+    wavelength channels sharing one delay loop — software-side, R reservoirs
+    with *different* masks over *different* input streams.  This is the
+    ``fit_ridge_streaming`` chunk scan with the per-lane-mask reservoir
+    kernel in the driver's seat: each chunk runs all R channels as ONE
+    Pallas launch (``generate_channel_states(method="kernel")`` — channels
+    are batch lanes with their own [N] mask tiles in VMEM) and folds into
+    per-channel Gram stacks G [R, F, F] / c [R, F, C] via the accumulate-into
+    kernel, followed by one vmapped GCV solve.  Peak live state memory is
+    O(R·chunk_k·N); the [R, K, N] channel-state tensor of the materialized
+    ``generate_channel_states`` path never exists — which is what lets long
+    WDM streams (K ≫ chunk) scale past HBM.
+
+    All other knob semantics (``noise_rel`` as expected Tikhonov diagonal,
+    ``state_dtype`` bf16 chunks, kernel/einsum Gram accumulation) match
+    ``fit_ridge_streaming``.  Returns ``(w [R, F, C], lam_idx [R],
+    s_end [R, N])`` with ``s_end`` the per-channel train -> test carry
+    (same exactness caveat for sub-f32 chunks with a ragged tail).
+    """
+    j, y = _canon_stream(j, targets)
+    if masks.ndim != 2 or masks.shape[0] != j.shape[0]:
+        raise ValueError(f"channels mismatch: j {j.shape} vs masks {masks.shape}")
+
+    def states_fn(j_c, s):
+        return generate_channel_states(model, j_c, masks, s0=s,
+                                       method=state_method, block_s=block_s,
+                                       return_final=True,
+                                       state_dtype=state_dtype)
+
+    return _fit_streaming_core(
+        states_fn, int(masks.shape[-1]), j, y, washout=washout,
+        chunk_k=chunk_k, lambdas=lambdas, use_kernel=use_kernel,
+        block_t=block_t, block_f=block_f, noise_rel=noise_rel,
+        state_dtype=state_dtype, s0=s0)

@@ -27,3 +27,16 @@ if importlib.util.find_spec("hypothesis") is None:
         f"{_HYPOTHESIS_MODULES}; `pip install -r requirements-dev.txt` to run them.",
         stacklevel=1,
     )
+
+
+def stack_datasets(datasets):
+    """Equal-shape core.tasks Datasets -> (tr_in, tr_tg, te_in, te_tg) stacks
+    with the instance axis leading — shared by the pipeline/streaming/WDM
+    test modules (same contract as benchmarks/common.stack_datasets, kept
+    separate so the test suite has no import-path dependency on the
+    benchmarks package)."""
+    import numpy as np
+
+    return tuple(np.stack([getattr(d, f) for d in datasets])
+                 for f in ("inputs_train", "targets_train",
+                           "inputs_test", "targets_test"))

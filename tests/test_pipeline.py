@@ -185,6 +185,41 @@ def test_matches_host_accelerator():
     assert abs(float(res.nrmse[0]) - err_host) < 0.05, (res.nrmse, err_host)
 
 
+def test_constant_target_nrmse_host_device_agree():
+    """Zero-variance targets (ISSUE 4 satellite): the NRMSE variance floor is
+    ONE shared constant (core.metrics.VAR_EPS) on the host metric and both
+    jit paths — a constant-target channel yields the same finite value
+    everywhere, instead of host 1e-300 vs device 1e-30 disagreeing by 135
+    orders of magnitude."""
+    import dataclasses
+
+    from repro.core import metrics
+
+    # T_test = 512: XLA lowers the /T_test of the running means to a
+    # multiply-by-reciprocal, which is only exact for power-of-two T — with
+    # T=512 and a const of 1.5 the f32 variance is exactly 0.0 on every
+    # path, so the comparison isolates the eps floor itself.
+    ds = tasks.narma10(1024, seed=1)
+    const = 1.5                       # exactly representable in f32
+    tr_tg = np.full_like(ds.targets_train, const)
+    te_tg = np.full_like(ds.targets_test, const)
+    base = ExperimentConfig(model=SiliconMR(), n_nodes=32, washout=40,
+                            ridge_l2=(1e-4,))
+    for cfg in (base,
+                dataclasses.replace(base, state_noise_rel=0.0,
+                                    state_method="kernel",
+                                    readout_use_kernel=True,
+                                    stream_chunk_k=64)):
+        res = Experiment(cfg).run(ds.inputs_train, tr_tg,
+                                  ds.inputs_test, te_tg)
+        assert np.isfinite(res.nrmse).all(), res.nrmse
+        host = metrics.nrmse(te_tg, res.y_pred[0])
+        assert np.isfinite(host)
+        # same eps, same (f32-rounded) predictions -> same value up to the
+        # f32-vs-f64 accumulation of the residual itself
+        np.testing.assert_allclose(res.nrmse[0], host, rtol=1e-3)
+
+
 def test_mzi_and_mg_models_run_batched(narma_small_batch):
     """The baseline device models run through the same compiled pipeline."""
     for model, levels in [(MZISine(), (0.0, 1.0)), (MackeyGlass(), (-1.0, 1.0))]:

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import stack_datasets as _stack
 from repro.core import SiliconMR, make_mask, tasks
 from repro.core.reservoir import generate_states
 from repro.kernels.dfr_scan import padded_lanes
@@ -22,13 +23,6 @@ from repro.pipeline.introspect import (count_scans, state_tensor_bytes,
                                        trace_jaxpr)
 
 LAMS = (1e-8, 1e-6, 1e-4)
-
-
-def _stack(datasets):
-    return (np.stack([d.inputs_train for d in datasets]),
-            np.stack([d.targets_train for d in datasets]),
-            np.stack([d.inputs_test for d in datasets]),
-            np.stack([d.targets_test for d in datasets]))
 
 
 @pytest.fixture(scope="module")
@@ -220,6 +214,77 @@ def test_streaming_run_pipeline_jaxpr(narma_batch):
     b = tr_in.shape[0]
     for t_len in (tr_in.shape[1], te_in.shape[1]):
         assert state_tensor_bytes(cj, t_len, b * t_len * cfg.n_nodes) == 0, t_len
+
+
+# ---------------------------------------------------------------------------
+# Metrics-only evaluation (collect_y_pred=False)
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_metrics_only_matches_collected(narma_batch):
+    """collect_y_pred=False returns y_pred=None with identical metrics — the
+    accumulators, not the stacked predictions, are the source of truth."""
+    res = Experiment(_base_cfg(stream_chunk_k=128)).run(*narma_batch)
+    res_nc = Experiment(_base_cfg(stream_chunk_k=128,
+                                  collect_y_pred=False)).run(*narma_batch)
+    assert res_nc.y_pred is None
+    assert res_nc.batch == res.batch
+    np.testing.assert_array_equal(res_nc.nrmse, res.nrmse)
+    np.testing.assert_array_equal(res_nc.ser, res.ser)
+    np.testing.assert_array_equal(res_nc.lam, res.lam)
+    np.testing.assert_array_equal(res_nc.readout_w, res.readout_w)
+
+
+def test_streaming_metrics_large_mean_target(narma_batch):
+    """The in-scan variance accumulator is *shifted* by the stream's first
+    sample: a target riding a large DC offset (mean ≫ std) must not lose
+    its variance to f32 single-pass cancellation — naive E[y²]−E[y]² at
+    offset 200 is wrong by O(100%) (or clamps to zero, exploding NRMSE
+    through the VAR_EPS floor).  The gold value is the host float64 metric
+    evaluated on the very predictions the streamed run emitted, so fit
+    degradation at the offset (a separate f32-conditioning story) cancels
+    out of the comparison."""
+    from repro.core import metrics
+
+    tr_in, tr_tg, te_in, te_tg = narma_batch
+    off = 200.0
+    res_off = Experiment(_base_cfg(stream_chunk_k=128)).run(
+        tr_in, tr_tg + off, te_in, te_tg + off)
+    assert np.all(np.isfinite(res_off.nrmse))
+    for i in range(te_tg.shape[0]):
+        host = metrics.nrmse(te_tg[i] + off, res_off.y_pred[i])
+        assert abs(res_off.nrmse[i] - host) / host < 0.02, (
+            i, res_off.nrmse[i], host)
+
+
+def test_streaming_metrics_only_jaxpr_no_prediction_block(narma_batch):
+    """Extends the memory gate to the prediction stream (ISSUE 4 satellite):
+    with collect_y_pred=False the chunked evaluation stacks nothing — no
+    [B, T_test, C] block exists in the program, while the default
+    (collect_y_pred=True) provably carries one.  C = 2 target channels make
+    the prediction block distinguishable from the O(B·T) input streams."""
+    tr_in, tr_tg, te_in, te_tg = narma_batch
+
+    def two_ch(tg):
+        return np.stack([tg, np.roll(tg, 1, axis=-1)], axis=-1)
+
+    from repro.pipeline.experiment import _run_pipeline
+
+    b, t_test = te_in.shape
+    c = 2
+    args = (jnp.asarray(tr_in, jnp.float32),
+            jnp.asarray(two_ch(tr_tg), jnp.float32),
+            jnp.asarray(te_in, jnp.float32),
+            jnp.asarray(two_ch(te_tg), jnp.float32))
+    for collect, expect_block in ((False, False), (True, True)):
+        cfg = _base_cfg(stream_chunk_k=128, collect_y_pred=collect)
+        mask = Experiment(cfg).mask
+        cj = trace_jaxpr(
+            lambda a, b_, c_, d: _run_pipeline(cfg, mask, a, b_, c_, d), *args)
+        pred_bytes = state_tensor_bytes(cj, t_test, b * t_test * c)
+        assert (pred_bytes > 0) == expect_block, (collect, pred_bytes)
+        # the state-tensor property holds in both modes
+        assert state_tensor_bytes(cj, t_test, b * t_test * cfg.n_nodes) == 0
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,72 @@
+"""NARMA10 divergence guard (ISSUE 4 satellite).
+
+The NARMA10 recursion (Eq. 10) is not globally stable: for unlucky U[0, 0.5]
+input draws the 0.05·y·Σy term wins and y escapes to inf.  Seed 83 at
+n_samples = 2000 is such a draw (found by sweeping the raw recursion) — the
+guard must detect it and re-draw deterministically, while every historically
+convergent seed keeps its exact pre-guard stream.
+
+Separate from test_tasks.py so it runs in hypothesis-less environments (the
+offline container skips the property-based modules at collection).
+"""
+
+import numpy as np
+
+from repro.core import tasks
+from repro.core.tasks import _narma10_recursion
+
+# Verified divergent at n_samples=2000 (+50 warmup) with default_rng(seed):
+# the raw recursion escapes past the divergence bound.  If numpy's generator
+# stream ever changes this constant needs re-discovery (sweep the raw
+# recursion) — the determinism tests below do not depend on it.
+DIVERGING_SEED = 83
+
+
+def test_narma10_raw_recursion_diverges_for_known_seed():
+    """The guard is protecting against something real: the unguarded
+    recursion on this seed's first draw escapes to inf."""
+    rng = np.random.default_rng(DIVERGING_SEED)
+    i = rng.uniform(0.0, 0.5, size=2050)
+    y = _narma10_recursion(i)
+    assert not np.isfinite(y).all()
+
+
+def test_narma10_diverging_seed_redrawn_and_finite():
+    """The guarded generator redraws the diverging seed (different inputs
+    than the raw first draw) and returns a bounded trajectory."""
+    ds = tasks.narma10(2000, seed=DIVERGING_SEED)
+    y = np.concatenate([ds.targets_train, ds.targets_test])
+    i = np.concatenate([ds.inputs_train, ds.inputs_test])
+    assert np.isfinite(y).all() and np.isfinite(i).all()
+    assert np.abs(y).max() < 2.0
+    raw_first_draw = np.random.default_rng(DIVERGING_SEED).uniform(
+        0.0, 0.5, size=2050)[50:]
+    assert not np.array_equal(i, raw_first_draw)
+
+
+def test_narma10_redraw_is_deterministic():
+    a = tasks.narma10(2000, seed=DIVERGING_SEED)
+    b = tasks.narma10(2000, seed=DIVERGING_SEED)
+    np.testing.assert_array_equal(a.inputs_train, b.inputs_train)
+    np.testing.assert_array_equal(a.targets_test, b.targets_test)
+
+
+def test_narma10_convergent_seeds_keep_historical_stream():
+    """Attempt 0 is byte-identical to the pre-guard generator: convergent
+    seeds (the overwhelming majority) see no change at all."""
+    for seed in (0, 1, 7):
+        ds = tasks.narma10(800, seed=seed)
+        raw = np.random.default_rng(seed).uniform(0.0, 0.5, size=850)[50:]
+        np.testing.assert_array_equal(
+            np.concatenate([ds.inputs_train, ds.inputs_test]), raw)
+
+
+def test_narma10_seed_sweep_all_finite():
+    """The satellite's acceptance check: a seed sweep wide enough to include
+    known-divergent draws (83 < 120) comes back all-finite — no silent inf
+    rows poisoning a vmapped batch."""
+    for seed in range(120):
+        ds = tasks.narma10(2000, seed=seed)
+        assert np.isfinite(ds.targets_train).all(), seed
+        assert np.isfinite(ds.targets_test).all(), seed
+        assert np.abs(ds.targets_train).max() < 2.0, seed
