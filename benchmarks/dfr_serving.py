@@ -1,0 +1,227 @@
+"""Online-learning DFR serving benchmark: sustained throughput + tick latency.
+
+Quantifies what ISSUE 6 builds.  The serving loop (``launch/serve_dfr``)
+ticks a continuously-batched ``SessionState`` slab through ``session_step``:
+one reservoir pass per ``chunk_k`` periods shared by prediction and the RLS
+Gram fold, readout re-solved in-graph every ``refresh_every``-th tick.  This
+benchmark drives the real ``DFRServer`` (slot packing, resets, donation)
+with synthetic streams and reports, per (B, λ) cell:
+
+* ``streams_per_s`` / ``periods_per_s`` — sustained completion throughput
+  over the drain of ``requests`` streams through ``B`` slots;
+* ``tick_p50_us`` / ``tick_p99_us`` — per-tick step latency quantiles
+  (post-warmup; both step variants are compiled before timing).
+
+Plus jaxpr-derived memory gates (backend-exact, like streaming_fusion): the
+serve step is ONE compiled program whose largest live state block is the
+chunk — a server holding B live sessions must never materialise a
+full-stream [B, T, N] tensor, or slot residency would scale with stream
+length instead of chunk size.
+
+Emits ``BENCH_dfr_serving.json``; ``--smoke`` is the tier-1 CI gate:
+
+* the traced step holds no state tensor with a full-stream axis,
+* step peak state bytes stay within 2× the chunk budget,
+* λ only rescales carried statistics: both λ cells must compile to the same
+  program count and identical peak-bytes numbers.
+
+  PYTHONPATH=src python -m benchmarks.dfr_serving [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.masking import make_mask
+from repro.launch.serve_dfr import DFRServer, StreamRequest
+from repro.pipeline.introspect import (max_intermediate_bytes,
+                                       state_tensor_bytes, trace_jaxpr)
+from repro.pipeline.session import SessionConfig, _session_step, session_init
+
+from .common import csv_row
+
+GRID_B = (64, 512, 4096)
+GRID_LAM = (1.0, 0.99)
+N_NODES = 64
+CHUNK = 32
+WASHOUT = 32
+STREAM_LEN = 256          # periods per request (8 ticks)
+REFRESH_EVERY = 4
+LAMS = (1e-8, 1e-6, 1e-4)
+# CPU drains the big-B cells at reduced request multiplicity; TPU runs full
+CPU_REQ_CAP = 1024
+
+
+def _cfg(forgetting: float, chunk: int = CHUNK) -> SessionConfig:
+    return SessionConfig(n_nodes=N_NODES, washout=WASHOUT, chunk_k=chunk,
+                         forgetting=forgetting, refresh_every=REFRESH_EVERY,
+                         ridge_l2=LAMS, state_method="fast")
+
+
+def _trace_step(cfg: SessionConfig, b: int, *, refresh: bool):
+    mask = make_mask(cfg.n_nodes, seed=0)
+    state = session_init(cfg, b)
+    ck = cfg.chunk_k
+    z = jnp.zeros((b, ck), jnp.float32)
+    nv = jnp.zeros((b,), jnp.int32)
+    rs = jnp.zeros((b,), bool)
+    fn = jax.jit(_session_step, static_argnames=("cfg", "refresh"))
+    return trace_jaxpr(lambda st, jc, yc: fn(cfg, mask, st, jc, yc,
+                                             refresh=refresh, n_valid=nv,
+                                             reset=rs), state, z, z)
+
+
+def measure_cell(b: int, forgetting: float, *, requests: int,
+                 stream_len: int = STREAM_LEN, timed: bool = True) -> dict:
+    cfg = _cfg(forgetting)
+    n, ck = cfg.n_nodes, cfg.chunk_k
+
+    # jaxpr gates: both step variants, measured against the chunk budget and
+    # the would-be full-stream tensor
+    gates = {}
+    for refresh, tag in ((False, "fold"), (True, "fold_solve")):
+        cj = _trace_step(cfg, b, refresh=refresh)
+        gates[tag] = {
+            "peak_state_bytes": state_tensor_bytes(cj, ck, b * ck * n),
+            "full_stream_state_bytes": state_tensor_bytes(
+                cj, stream_len, b * stream_len * n),
+            "peak_any_bytes": max_intermediate_bytes(cj),
+        }
+    fp = -(-(n + 1) // 128) * 128
+    entry = {
+        "b": b, "forgetting": forgetting, "nodes": n, "chunk": ck,
+        "stream_len": stream_len, "requests": requests,
+        "refresh_every": cfg.refresh_every,
+        "chunk_budget_bytes": b * ck * fp * 4,
+        "step": gates,
+        "timed": bool(timed),
+    }
+    if not timed:
+        return entry
+
+    server = DFRServer(cfg, b, mask_seed=0)
+    server.warmup()
+    rng = np.random.default_rng(b + int(forgetting * 100))
+    for r in range(requests):
+        server.submit(StreamRequest(
+            rid=r,
+            j=rng.uniform(0.0, 1.0, stream_len).astype(np.float32),
+            y=rng.choice([-3.0, -1.0, 1.0, 3.0], stream_len).astype(np.float32)))
+    import time
+    t0 = time.perf_counter()
+    server.drain()
+    wall = time.perf_counter() - t0
+    ticks_us = np.asarray(server.tick_seconds) * 1e6
+    entry.update({
+        "ticks": server.tick,
+        "completed": len(server.completed),
+        "wall_s": round(wall, 4),
+        "streams_per_s": round(len(server.completed) / max(wall, 1e-9), 2),
+        "periods_per_s": round(
+            len(server.completed) * stream_len / max(wall, 1e-9), 1),
+        "tick_p50_us": round(float(np.percentile(ticks_us, 50)), 1),
+        "tick_p99_us": round(float(np.percentile(ticks_us, 99)), 1),
+    })
+    return entry
+
+
+def check(report: dict) -> list[str]:
+    """Regression gates (jaxpr bytes everywhere; λ-invariance of the program)."""
+    failures = []
+    by_b: dict[int, list[dict]] = {}
+    for e in report["cells"]:
+        by_b.setdefault(e["b"], []).append(e)
+        for tag, g in e["step"].items():
+            if g["full_stream_state_bytes"]:
+                failures.append(
+                    f"serve step ({tag}) materialises a full-stream state "
+                    f"tensor at B={e['b']} lam={e['forgetting']}")
+            if g["peak_state_bytes"] > 2 * e["chunk_budget_bytes"]:
+                failures.append(
+                    f"serve step ({tag}) peak state bytes "
+                    f"{g['peak_state_bytes']} exceed 2x chunk budget "
+                    f"{e['chunk_budget_bytes']} at B={e['b']} "
+                    f"lam={e['forgetting']}")
+    for b, cells in by_b.items():
+        peaks = {json.dumps({t: {k: g[k] for k in
+                                 ("peak_state_bytes", "full_stream_state_bytes")}
+                             for t, g in e["step"].items()}, sort_keys=True)
+                 for e in cells}
+        if len(peaks) > 1:
+            failures.append(
+                f"λ changed the compiled step's memory profile at B={b} — "
+                f"forgetting must only rescale carried statistics")
+    return failures
+
+
+def build_report(*, smoke: bool) -> dict:
+    backend = jax.default_backend()
+    if smoke:
+        cells = [measure_cell(64, lam, requests=96, stream_len=128)
+                 for lam in GRID_LAM]
+    else:
+        cells = []
+        for b in GRID_B:
+            for lam in GRID_LAM:
+                req = 2 * b
+                if backend != "tpu":
+                    req = min(req, CPU_REQ_CAP)
+                cells.append(measure_cell(b, lam, requests=req))
+    return {
+        "config": {"backend": backend, "smoke": smoke, "nodes": N_NODES,
+                   "chunk": CHUNK, "washout": WASHOUT,
+                   "refresh_every": REFRESH_EVERY,
+                   "wall_note": "off-TPU walls are functional numbers; the "
+                                "jaxpr byte gates are backend-exact"},
+        "cells": cells,
+    }
+
+
+def run() -> list[str]:
+    """benchmarks.run section: CSV rows + the JSON artifact."""
+    report = build_report(smoke=False)
+    with open("BENCH_dfr_serving.json", "w") as fh:
+        json.dump(report, fh, indent=2)
+    failures = check(report)
+    if failures:
+        raise AssertionError("dfr_serving check FAILED: " + "; ".join(failures))
+    rows = []
+    for e in report["cells"]:
+        name = f"dfr_serving/B{e['b']}_lam{e['forgetting']}"
+        if e.get("timed"):
+            rows.append(csv_row(f"{name}/streams_per_s",
+                                f"{e['streams_per_s']:.1f}",
+                                f"periods_per_s={e['periods_per_s']:.0f}"))
+            rows.append(csv_row(f"{name}/tick_p99_us",
+                                f"{e['tick_p99_us']:.0f}",
+                                f"p50={e['tick_p50_us']:.0f}"))
+        rows.append(csv_row(
+            f"{name}/step_peak_state_bytes",
+            str(e["step"]["fold_solve"]["peak_state_bytes"]),
+            f"budget={e['chunk_budget_bytes']}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="B=64-only cells / short streams (CI gate on the "
+                         "jaxpr memory profile of the serve step)")
+    ap.add_argument("--out", default="BENCH_dfr_serving.json")
+    args = ap.parse_args()
+    report = build_report(smoke=args.smoke)
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(json.dumps(report, indent=2))
+    failures = check(report)
+    if failures:
+        raise SystemExit("dfr_serving check FAILED: " + "; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

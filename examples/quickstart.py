@@ -8,6 +8,13 @@ ONE compiled call (repro.pipeline.Experiment) — batch a [B, T] stack of
 inputs to sweep seeds or SNRs in the same call.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Where to next:
+  examples/channel_equalization.py — the offline SNR sweep (Fig. 6)
+  examples/online_equalization.py  — ONLINE readouts tracking a drifting
+                                     link (RLS forgetting, DESIGN.md §10)
+  launch/serve_dfr.py              — continuous-batching DFR serving:
+    PYTHONPATH=src python -m repro.launch.serve_dfr --requests 64 --batch 16
 """
 
 from repro.core import MZISine, MackeyGlass, SiliconMR, tasks

@@ -130,6 +130,25 @@ def santa_fe(n_samples: int = 6000, *, train_frac: float = 4000 / 6000, seed: in
 
 SYMBOLS = np.array([-3.0, -1.0, 1.0, 3.0])
 
+# Linear-ISI taps of the Jaeger & Haas channel (paper Eq. (11)):
+# q(n) = Σ_off w_off · d(n + off), taps n+2 .. n-7.
+_CHAN_EQ_TAPS = {2: 0.08, 1: -0.12, 0: 1.0, -1: 0.18, -2: -0.1, -3: 0.09,
+                 -4: -0.05, -5: 0.04, -6: 0.03, -7: 0.01}
+
+
+# Post-drift link of channel_equalization_drift: the multipath changes — the
+# first post-cursor echo flips sign and strengthens, the pre-cursor and
+# second echo grow.  A readout equalising the old link misreads this one.
+_CHAN_EQ_TAPS_DRIFTED = {**_CHAN_EQ_TAPS, 1: 0.20, -1: -0.25, -2: 0.15}
+
+
+def _chan_eq_clean(d: np.ndarray, taps=_CHAN_EQ_TAPS) -> np.ndarray:
+    """Noise-free received signal: linear ISI + cubic distortion (Eq. (11-12))."""
+    q = np.zeros(d.shape[0])
+    for off, w in taps.items():
+        q += w * np.roll(d, -off)  # q(n) += w * d(n + off)
+    return q + 0.036 * q**2 - 0.011 * q**3
+
 
 def channel_equalization(
     n_symbols: int = 9000, *, snr_db: float = 24.0, train_frac: float = 6000 / 9000, seed: int = 0
@@ -144,18 +163,55 @@ def channel_equalization(
     pad = 16
     n = n_symbols + 2 * pad
     d = rng.choice(SYMBOLS, size=n)
-    taps = {2: 0.08, 1: -0.12, 0: 1.0, -1: 0.18, -2: -0.1, -3: 0.09,
-            -4: -0.05, -5: 0.04, -6: 0.03, -7: 0.01}
-    q = np.zeros(n)
-    for off, w in taps.items():
-        q += w * np.roll(d, -off)  # q(n) += w * d(n + off)
-    x = q + 0.036 * q**2 - 0.011 * q**3
+    x = _chan_eq_clean(d)
     sig_p = np.mean(x**2)
     noise_p = sig_p / (10.0 ** (snr_db / 10.0))
     x = x + rng.normal(0.0, np.sqrt(noise_p), size=n)
     d, x = d[pad:-pad], x[pad:-pad]
     split = int(n_symbols * train_frac)
     return Dataset(x[:split], d[:split], x[split:], d[split:], name=f"chan_eq_snr{snr_db:g}")
+
+
+def channel_equalization_drift(
+    n_symbols: int = 6000, *, snr_db: float = 28.0, snr_db_after: float = 16.0,
+    drift_frac: float = 0.5, drift_taps: bool = True, train_frac: float = 0.0,
+    seed: int = 0,
+) -> Dataset:
+    """Channel equalisation with a mid-stream link drift (online workload).
+
+    Same ISI + cubic channel family as :func:`channel_equalization`, but at
+    ``drift_frac`` of the stream the link changes: the AWGN power steps from
+    ``snr_db`` to ``snr_db_after`` and (``drift_taps=True``) the multipath
+    taps switch to ``_CHAN_EQ_TAPS_DRIFTED`` — the canonical drifting-link
+    scenario where a forgetting-factor readout (pipeline/session, DESIGN.md
+    §10) must out-track a λ = 1 one: the old link's equaliser misreads the
+    new echoes, and the plain running Gram keeps it anchored there.  The
+    default ``train_frac=0`` puts the whole stream in the test split: the
+    intended consumer is the online session API, which learns as it serves
+    (examples/online_equalization.py).
+    """
+    if not 0.0 < drift_frac < 1.0:
+        raise ValueError(f"drift_frac must be in (0, 1), got {drift_frac}")
+    rng = np.random.default_rng(seed)
+    pad = 16
+    n = n_symbols + 2 * pad
+    d = rng.choice(SYMBOLS, size=n)
+    k_step = pad + int(n_symbols * drift_frac)
+    before = np.arange(n) < k_step
+    taps_after = _CHAN_EQ_TAPS_DRIFTED if drift_taps else _CHAN_EQ_TAPS
+    x_before = _chan_eq_clean(d)
+    x = np.where(before, x_before, _chan_eq_clean(d, taps_after))
+    # SNR referenced to the ORIGINAL link's clean power, so the pre-drift
+    # segment is independent of what the link later drifts to
+    sig_p = np.mean(x_before**2)
+    sigma = np.where(before,
+                     np.sqrt(sig_p / 10.0 ** (snr_db / 10.0)),
+                     np.sqrt(sig_p / 10.0 ** (snr_db_after / 10.0)))
+    x = x + sigma * rng.standard_normal(n)
+    d, x = d[pad:-pad], x[pad:-pad]
+    split = int(n_symbols * train_frac)
+    return Dataset(x[:split], d[:split], x[split:], d[split:],
+                   name=f"chan_eq_drift_snr{snr_db:g}to{snr_db_after:g}")
 
 
 def quantize_symbols(y: np.ndarray) -> np.ndarray:

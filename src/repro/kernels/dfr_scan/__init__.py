@@ -1,5 +1,6 @@
 from . import ops, ref
-from .ops import auto_block_s, dfr_scan, padded_lanes
+from .ops import auto_block_s, dfr_scan, min_sublanes, padded_lanes
 from .ref import dfr_scan_ref
 
-__all__ = ["auto_block_s", "dfr_scan", "dfr_scan_ref", "ops", "padded_lanes", "ref"]
+__all__ = ["auto_block_s", "dfr_scan", "dfr_scan_ref", "min_sublanes", "ops",
+           "padded_lanes", "ref"]

@@ -109,6 +109,19 @@ def dfr_scan_tiled(
     n_nodes = mask.shape[0]
     if s_total % block_s:
         raise ValueError(f"S_total {s_total} not divisible by block_s {block_s}")
+    # Multi-tile emitted blocks must start on the out dtype's min-tile
+    # boundary: (8, 128) covers f32, but a bf16/int8 out block needs
+    # (16/32, 128) sublane alignment — a sub-minimal block_s would place
+    # tile b at sublane offset b·block_s, illegal for every odd b on real
+    # Mosaic even though interpret mode happily computes it.  Single-tile
+    # blocks (block spans the whole S axis, offset always 0) are exempt.
+    min_sub = max(8, 32 // out_dtype.itemsize)
+    if s_total > block_s and out_dtype.itemsize < 4 and block_s % min_sub:
+        raise ValueError(
+            f"out_dtype {out_dtype} needs block_s a multiple of {min_sub} "
+            f"once the batch spans multiple tiles (S_total {s_total} > "
+            f"block_s {block_s}); pick block_s={min_sub} or let "
+            f"auto_block_s choose it")
     per_lane = mask.ndim == 3
     grid = (s_total // block_s, k_periods)
 

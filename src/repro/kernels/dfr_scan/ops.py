@@ -26,27 +26,44 @@ import jax.numpy as jnp
 
 from .dfr_scan import LANES, dfr_scan_tiled
 
-_BLOCK_S_CHOICES = (1, 2, 4, 8)
+_BLOCK_S_CHOICES = (1, 2, 4, 8, 16, 32)
 
 
 def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def auto_block_s(batch: int) -> int:
+def min_sublanes(dtype) -> int:
+    """Minimum sublane count of a TPU vreg tile for ``dtype``.
+
+    (8, 128) for 4-byte types, (16, 128) for 2-byte (bf16), (32, 128) for
+    1-byte (int8/fp8) — the packing rule sublanes × itemsize = 32 bytes.
+    A *multi-tile* block of this dtype must start on such a boundary; a
+    block that spans the whole axis (single tile) is exempt, since Mosaic
+    pads sub-minimal whole arrays internally.
+    """
+    return max(8, 32 // jnp.dtype(dtype).itemsize)
+
+
+def auto_block_s(batch: int, out_dtype=None) -> int:
     """Smallest sublane tile in {1, 2, 4, 8} whose (block_s, 128) tile covers
-    ``batch``; 8 (a full f32 vreg) once the batch spans multiple tiles."""
+    ``batch``; once the batch spans multiple tiles, 8 (a full f32 vreg) — or
+    the min tile of ``out_dtype`` when the *emitted* states are narrower than
+    f32, so every multi-tile out block sits on a legal (16/32, 128) boundary
+    instead of inheriting the f32 path's sub-minimal tile."""
     sublanes = -(-batch // LANES)
-    for cand in _BLOCK_S_CHOICES:
+    for cand in _BLOCK_S_CHOICES[:4]:          # single-tile ladder: 1, 2, 4, 8
         if cand >= sublanes:
             return cand
-    return _BLOCK_S_CHOICES[-1]
+    if out_dtype is not None and jnp.dtype(out_dtype).itemsize < 4:
+        return min_sublanes(out_dtype)
+    return 8
 
 
-def padded_lanes(batch: int, block_s: int | None = None) -> int:
+def padded_lanes(batch: int, block_s: int | None = None, out_dtype=None) -> int:
     """Total batch lanes (incl. padding) the kernel runs for ``batch``."""
     if block_s is None:
-        block_s = auto_block_s(batch)
+        block_s = auto_block_s(batch, out_dtype)
     tile = block_s * LANES
     return batch + (-batch % tile)
 
@@ -77,7 +94,7 @@ def dfr_scan(
     if mask.ndim == 2 and mask.shape[0] != b:
         raise ValueError(f"per-lane mask batch {mask.shape[0]} != j batch {b}")
     if block_s is None:
-        block_s = auto_block_s(b)
+        block_s = auto_block_s(b, out_dtype)
     elif block_s not in _BLOCK_S_CHOICES:
         raise ValueError(f"block_s must be one of {_BLOCK_S_CHOICES}, got {block_s}")
 

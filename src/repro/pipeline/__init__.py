@@ -8,11 +8,16 @@ from .experiment import (Experiment, ExperimentConfig, ExperimentResult,
 from .ridge import (apply_readout, fit_ridge, fit_ridge_batched,
                     fit_ridge_streaming, fit_ridge_streaming_wdm, gram,
                     solve_gcv, solve_gcv_svd, with_bias)
+from .session import (SessionConfig, SessionState, session_init,
+                      session_predict, session_reset, session_solve,
+                      session_step, session_update)
 
 __all__ = [
     "Experiment",
     "ExperimentConfig",
     "ExperimentResult",
+    "SessionConfig",
+    "SessionState",
     "WDMExperiment",
     "apply_readout",
     "channel_states",
@@ -21,6 +26,12 @@ __all__ = [
     "fit_ridge_streaming",
     "fit_ridge_streaming_wdm",
     "gram",
+    "session_init",
+    "session_predict",
+    "session_reset",
+    "session_solve",
+    "session_step",
+    "session_update",
     "solve_gcv",
     "solve_gcv_svd",
     "with_bias",

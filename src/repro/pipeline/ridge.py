@@ -32,6 +32,7 @@ a function of (G, c, y2, T) only.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -237,6 +238,85 @@ def _canon_stream(j, targets):
     return j, y
 
 
+@dataclasses.dataclass(frozen=True)
+class _FoldPlan:
+    """Static layout of one chunk -> Gram fold (shared by the streaming fits
+    and the online-learning sessions, pipeline/session.py).
+
+    ``fq`` is the feature-padded Gram side (kernel path: F rounded up to the
+    block_f tile so the carried [B, Fp, Fp] stacks never pad per chunk);
+    ``chunk_pt``/``eff_bt`` are the sublane-aligned T tile of the Pallas Gram
+    kernel (16-row tiles for sub-f32 chunks).  The jnp path folds with a
+    plain einsum and needs no padding.
+    """
+
+    f: int            # features = N + 1 (bias folded)
+    fq: int           # feature-padded Gram side
+    chunk_k: int      # periods per chunk
+    chunk_pt: int     # T-tile-padded chunk length (kernel path)
+    eff_bt: int       # effective Gram T tile (kernel path)
+    block_f: int
+    use_kernel: bool
+    interpret: bool
+
+
+def _plan_fold(f: int, chunk_k: int, *, use_kernel: bool, block_t: int,
+               block_f: int, state_dtype) -> _FoldPlan:
+    """Resolve the static fold layout for (F, chunk) under the chosen path."""
+    interpret = jax.default_backend() != "tpu"
+    if use_kernel:
+        from repro.kernels.ridge_gram.ops import effective_block_t
+
+        eff_bt = effective_block_t(chunk_k, block_t)
+        sdt = jnp.dtype(state_dtype if state_dtype is not None else jnp.float32)
+        if sdt.itemsize < 4:
+            # sub-f32 chunks need a 16-row sublane tile (bf16 min tile is
+            # (16, 128)); round the T tile up and let padding absorb it.
+            eff_bt = -(-eff_bt // 16) * 16
+        chunk_pt = chunk_k + (-chunk_k % eff_bt)
+        fq = f + (-f % block_f)
+    else:
+        eff_bt, chunk_pt, fq = 0, chunk_k, f
+    return _FoldPlan(f=f, fq=fq, chunk_k=chunk_k, chunk_pt=chunk_pt,
+                     eff_bt=eff_bt, block_f=block_f, use_kernel=use_kernel,
+                     interpret=interpret)
+
+
+def _fold_chunk(plan: _FoldPlan, g, cvec, y2, x, yv, *, forgetting: float = 1.0):
+    """Fold one washout/padding-masked chunk into the running statistics.
+
+    ``x`` [B, chunk, F] (bias column appended, invalid rows zeroed), ``yv``
+    [B, chunk, C] (invalid rows zeroed) update G [B, Fq, Fq], c [B, Fq, C]
+    and ‖y‖² [B] — via the accumulate-into Pallas kernel or a plain einsum,
+    per ``plan``.  ``forgetting`` < 1 applies RLS-style exponential decay:
+    the *carried* statistics are scaled by λ before this chunk accumulates,
+    so after n chunks chunk i carries weight λ^(n-1-i).  At λ = 1.0 the
+    scaling inserts no ops at trace time — the fold is bit-identical to the
+    historical (un-decayed) path, which tests/benchmarks pin bitwise.
+    """
+    if forgetting != 1.0:
+        lam = jnp.float32(forgetting)
+        g = g * lam
+        cvec = cvec * lam
+        y2 = y2 * lam
+    y2 = y2 + jnp.sum(yv * yv, axis=(1, 2))
+    if plan.use_kernel:
+        from repro.kernels.ridge_gram.ridge_gram import gram_tiled_batched_into
+
+        xq = jnp.pad(x, ((0, 0), (0, plan.chunk_pt - plan.chunk_k),
+                         (0, plan.fq - plan.f)))
+        yq = jnp.pad(yv, ((0, 0), (0, plan.chunk_pt - plan.chunk_k), (0, 0)))
+        g, cvec = gram_tiled_batched_into(g, cvec, xq, yq, block_t=plan.eff_bt,
+                                          block_f=plan.block_f,
+                                          interpret=plan.interpret)
+    else:
+        g = g + jnp.einsum("btf,btg->bfg", x, x,
+                           preferred_element_type=jnp.float32)
+        cvec = cvec + jnp.einsum("btf,btc->bfc", x, yv,
+                                 preferred_element_type=jnp.float32)
+    return g, cvec, y2
+
+
 def _fit_streaming_core(
     states_fn,             # (j_chunk [B, chunk], s [B, N] f32) -> (states, s_next)
     n: int,                # nodes per instance/channel
@@ -252,8 +332,9 @@ def _fit_streaming_core(
     noise_rel: float,
     state_dtype,
     s0: jnp.ndarray | None,
+    forgetting: float = 1.0,
 ):
-    """The shared chunk-scan of both streaming fits (DESIGN.md §8/§9).
+    """The shared chunk-scan of both streaming fits (DESIGN.md §8/§9/§10).
 
     ``states_fn`` is the only degree of freedom between the single-mask fit
     (``fit_ridge_streaming``: one mask broadcast over B task instances) and
@@ -268,30 +349,29 @@ def _fit_streaming_core(
     ``preferred_element_type``), and the target stream stays f32 — only the
     [B, chunk, F] block that round-trips through HBM per chunk narrows, which
     is where the traffic is.
+
+    ``forgetting`` < 1 turns the fit into RLS-style exponential forgetting
+    (DESIGN.md §10): the carried (G, c, ‖y‖²) are scaled by λ per chunk
+    before the chunk accumulates, and the GCV solve sees the *effective*
+    (decayed) sample count instead of T_fit.  λ = 1.0 adds no ops — the
+    historical path, pinned bitwise by tests/test_serving.py.
     """
     b, k_total = j.shape
     f = n + 1
     c_cols = y.shape[-1]
     if k_total <= washout:
         raise ValueError(f"stream length {k_total} <= washout {washout}")
+    if not 0.0 < forgetting <= 1.0:
+        raise ValueError(f"forgetting must be in (0, 1], got {forgetting}")
+    if noise_rel and forgetting != 1.0:
+        raise ValueError(
+            "noise_rel as an expected Tikhonov diagonal assumes un-decayed "
+            "Gram statistics; forgetting < 1 is not supported with it")
     t_fit = k_total - washout
     n_chunks, k_padded = _chunk_layout(k_total, chunk_k)
-    sdt = jnp.dtype(state_dtype if state_dtype is not None else jnp.float32)
-
-    interpret = jax.default_backend() != "tpu"
-    if use_kernel:
-        from repro.kernels.ridge_gram.ops import effective_block_t
-        from repro.kernels.ridge_gram.ridge_gram import gram_tiled_batched_into
-
-        eff_bt = effective_block_t(chunk_k, block_t)
-        if sdt.itemsize < 4:
-            # sub-f32 chunks need a 16-row sublane tile (bf16 min tile is
-            # (16, 128)); round the T tile up and let padding absorb it.
-            eff_bt = -(-eff_bt // 16) * 16
-        chunk_pt = chunk_k + (-chunk_k % eff_bt)
-        fq = f + (-f % block_f)
-    else:
-        chunk_pt, fq = chunk_k, f
+    plan = _plan_fold(f, chunk_k, use_kernel=use_kernel, block_t=block_t,
+                      block_f=block_f, state_dtype=state_dtype)
+    fq = plan.fq
 
     jp = jnp.pad(j, ((0, 0), (0, k_padded - k_total)))
     yp = jnp.pad(y, ((0, 0), (0, k_padded - k_total), (0, 0)))
@@ -305,6 +385,7 @@ def _fit_streaming_core(
         jnp.zeros((b,), jnp.float32),          # ‖y‖² over the fit window
         jnp.zeros((b,), jnp.float32),          # Σ s   (noise σ estimate)
         jnp.zeros((b,), jnp.float32),          # Σ s²
+        jnp.zeros((b,), jnp.float32),          # effective (decayed) samples
         jnp.asarray(s0, jnp.float32),          # state after period K - 1
     )
     xs = (_chunk_axis(jp, n_chunks, chunk_k),
@@ -312,7 +393,7 @@ def _fit_streaming_core(
           jnp.arange(n_chunks, dtype=jnp.int32) * chunk_k)
 
     def body(carry, chunk):
-        s, g, cvec, y2, ssum, ssq, s_end = carry
+        s, g, cvec, y2, ssum, ssq, tcnt, s_end = carry
         j_c, y_c, k_start = chunk
         states, s_next = states_fn(j_c, s)
         tidx = k_start + jnp.arange(chunk_k, dtype=jnp.int32)
@@ -324,22 +405,15 @@ def _fit_streaming_core(
         # bf16 chunk is not silently promoted back to f32 by the multiply
         x = x * vfit.astype(x.dtype)[None, :, None]
         yv = y_c * vfit[None, :, None]
-        y2 = y2 + jnp.sum(yv * yv, axis=(1, 2))
         if noise_rel:
             sv = states.astype(jnp.float32) * vfit[None, :, None]
             ssum = ssum + jnp.sum(sv, axis=(1, 2))
             ssq = ssq + jnp.sum(sv * sv, axis=(1, 2))
+        if forgetting != 1.0:
+            tcnt = tcnt * jnp.float32(forgetting) + jnp.sum(vfit)
 
-        if use_kernel:
-            xq = jnp.pad(x, ((0, 0), (0, chunk_pt - chunk_k), (0, fq - f)))
-            yq = jnp.pad(yv, ((0, 0), (0, chunk_pt - chunk_k), (0, 0)))
-            g, cvec = gram_tiled_batched_into(g, cvec, xq, yq, block_t=eff_bt,
-                                              block_f=block_f, interpret=interpret)
-        else:
-            g = g + jnp.einsum("btf,btg->bfg", x, x,
-                               preferred_element_type=jnp.float32)
-            cvec = cvec + jnp.einsum("btf,btc->bfc", x, yv,
-                                     preferred_element_type=jnp.float32)
+        g, cvec, y2 = _fold_chunk(plan, g, cvec, y2, x, yv,
+                                  forgetting=forgetting)
 
         # State after period K - 1 (this chunk's padded tail, if any, keeps
         # evolving on zero input — the carry must come from the last *real*
@@ -353,9 +427,10 @@ def _fit_streaming_core(
                                            keepdims=False).astype(jnp.float32)
         s_k = jnp.where(at_chunk_end, s_next, s_k)
         s_end = jnp.where(in_chunk, s_k, s_end)
-        return (s_next, g, cvec, y2, ssum, ssq, s_end), None
+        return (s_next, g, cvec, y2, ssum, ssq, tcnt, s_end), None
 
-    (s_last, g, cvec, y2, ssum, ssq, s_end), _ = jax.lax.scan(body, carry0, xs)
+    (s_last, g, cvec, y2, ssum, ssq, tcnt, s_end), _ = jax.lax.scan(
+        body, carry0, xs)
     del s_last
 
     if noise_rel:
@@ -368,14 +443,21 @@ def _fit_streaming_core(
     cvec = cvec[:, :f]
 
     lams = tuple(lambdas)
-    w, idx = jax.vmap(
-        lambda gb, cb, y2b: solve_gcv(gb, cb, y2b, t_fit, lams))(g, cvec, y2)
+    if forgetting != 1.0:
+        # decayed statistics -> decayed effective sample count in the GCV
+        # score (Σ_i λ^(n-1-i)·valid_i, the standard RLS memory length)
+        w, idx = jax.vmap(lambda gb, cb, y2b, nb: solve_gcv(
+            gb, cb, y2b, nb, lams))(g, cvec, y2, tcnt)
+    else:
+        w, idx = jax.vmap(
+            lambda gb, cb, y2b: solve_gcv(gb, cb, y2b, t_fit, lams))(g, cvec, y2)
     return w, idx, s_end
 
 
 @functools.partial(jax.jit, static_argnames=(
     "model", "washout", "chunk_k", "lambdas", "state_method", "block_s",
-    "use_kernel", "block_t", "block_f", "noise_rel", "state_dtype"))
+    "use_kernel", "block_t", "block_f", "noise_rel", "state_dtype",
+    "forgetting"))
 def fit_ridge_streaming(
     model,
     mask: jnp.ndarray,     # [N]
@@ -393,6 +475,7 @@ def fit_ridge_streaming(
     noise_rel: float = 0.0,
     state_dtype=None,
     s0: jnp.ndarray | None = None,
+    forgetting: float = 1.0,
 ):
     """Streaming fused reservoir -> readout fit: states never fully resident.
 
@@ -427,6 +510,12 @@ def fit_ridge_streaming(
     ``ExperimentConfig.state_noise_mode="diagonal"``; the sampled-noise path
     stays available on the unfused route.
 
+    ``forgetting`` < 1 applies RLS-style exponential forgetting (DESIGN.md
+    §10): chunk i of n carries weight λ^(n-1-i) in the Gram statistics, so
+    the fit tracks a drifting stream (online channel equalisation, device
+    operating-point drift) instead of averaging over its whole history.
+    λ = 1.0 is bit-identical to the un-decayed fit.
+
     Returns ``(w [B, F, C], lam_idx [B], s_end [B, N])`` where ``s_end`` is
     the reservoir state after period K - 1 (the train -> test carry), exact
     even when K is not a multiple of ``chunk_k`` — except that with a
@@ -445,12 +534,14 @@ def fit_ridge_streaming(
     return _fit_streaming_core(
         states_fn, int(mask.shape[-1]), j, y, washout=washout, chunk_k=chunk_k,
         lambdas=lambdas, use_kernel=use_kernel, block_t=block_t,
-        block_f=block_f, noise_rel=noise_rel, state_dtype=state_dtype, s0=s0)
+        block_f=block_f, noise_rel=noise_rel, state_dtype=state_dtype, s0=s0,
+        forgetting=forgetting)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "model", "washout", "chunk_k", "lambdas", "state_method", "block_s",
-    "use_kernel", "block_t", "block_f", "noise_rel", "state_dtype"))
+    "use_kernel", "block_t", "block_f", "noise_rel", "state_dtype",
+    "forgetting"))
 def fit_ridge_streaming_wdm(
     model,
     masks: jnp.ndarray,    # [R, N] — one MLS mask per wavelength channel
@@ -468,6 +559,7 @@ def fit_ridge_streaming_wdm(
     noise_rel: float = 0.0,
     state_dtype=None,
     s0: jnp.ndarray | None = None,
+    forgetting: float = 1.0,
 ):
     """Streaming readout fit for a WDM ensemble: per-channel masks, one scan.
 
@@ -485,10 +577,11 @@ def fit_ridge_streaming_wdm(
     WDM streams (K ≫ chunk) scale past HBM.
 
     All other knob semantics (``noise_rel`` as expected Tikhonov diagonal,
-    ``state_dtype`` bf16 chunks, kernel/einsum Gram accumulation) match
-    ``fit_ridge_streaming``.  Returns ``(w [R, F, C], lam_idx [R],
-    s_end [R, N])`` with ``s_end`` the per-channel train -> test carry
-    (same exactness caveat for sub-f32 chunks with a ragged tail).
+    ``state_dtype`` bf16 chunks, kernel/einsum Gram accumulation,
+    ``forgetting`` as per-chunk RLS decay) match ``fit_ridge_streaming``.
+    Returns ``(w [R, F, C], lam_idx [R], s_end [R, N])`` with ``s_end`` the
+    per-channel train -> test carry (same exactness caveat for sub-f32
+    chunks with a ragged tail).
     """
     j, y = _canon_stream(j, targets)
     if masks.ndim != 2 or masks.shape[0] != j.shape[0]:
@@ -504,4 +597,4 @@ def fit_ridge_streaming_wdm(
         states_fn, int(masks.shape[-1]), j, y, washout=washout,
         chunk_k=chunk_k, lambdas=lambdas, use_kernel=use_kernel,
         block_t=block_t, block_f=block_f, noise_rel=noise_rel,
-        state_dtype=state_dtype, s0=s0)
+        state_dtype=state_dtype, s0=s0, forgetting=forgetting)

@@ -15,6 +15,7 @@ _HYPOTHESIS_MODULES = [
     "test_attention.py",
     "test_masking.py",
     "test_nonlinear.py",
+    "test_properties.py",
     "test_readout.py",
     "test_tasks.py",
 ]

@@ -7,7 +7,8 @@ import numpy as np
 import pytest
 
 from repro.core import MZISine, MackeyGlass, SiliconMR, make_mask
-from repro.kernels.dfr_scan import auto_block_s, dfr_scan, dfr_scan_ref, padded_lanes
+from repro.kernels.dfr_scan import (auto_block_s, dfr_scan, dfr_scan_ref,
+                                    min_sublanes, padded_lanes)
 from repro.kernels.ridge_gram import (effective_block_t, gram_accumulate,
                                       gram_accumulate_batched,
                                       gram_accumulate_batched_into, gram_ref,
@@ -168,6 +169,69 @@ def test_dfr_scan_rejects_bad_block_s():
     mask = make_mask(5, seed=1)
     with pytest.raises(ValueError, match="block_s"):
         dfr_scan(model, j, mask, jnp.zeros((4, 5), jnp.float32), block_s=3)
+
+
+# ---------------------------------------------------------------------------
+# Sub-f32 out-tile sublane alignment (ROADMAP fix): a multi-tile bf16/int8
+# emitted block must sit on that dtype's (16/32, 128) min-tile boundary —
+# the f32 path's sub-minimal (block_s, 128) tile is illegal for narrower
+# dtypes on real Mosaic, and interpret mode silently computes it anyway, so
+# the compiled-shape contract is enforced at trace time (backend-independent)
+# ---------------------------------------------------------------------------
+
+
+def test_min_sublanes_follows_tpu_packing():
+    """sublanes × itemsize = 32 bytes: f32 (8,128), bf16 (16,128), int8 (32,128)."""
+    assert min_sublanes(jnp.float32) == 8
+    assert min_sublanes(jnp.bfloat16) == 16
+    assert min_sublanes(jnp.float16) == 16
+    assert min_sublanes(jnp.int8) == 32
+
+
+def test_auto_block_s_is_out_dtype_aware():
+    """Single-tile batches keep the small f32 ladder (whole-axis blocks are
+    alignment-exempt); multi-tile sub-f32 batches get the dtype's min tile."""
+    assert auto_block_s(64, jnp.bfloat16) == 1      # one tile: exempt
+    assert auto_block_s(2 * 128 + 17, jnp.bfloat16) == 4  # pads to ONE 4-row tile
+    assert auto_block_s(9 * 128, jnp.bfloat16) == 16      # multi-tile: bf16 min
+    assert auto_block_s(9 * 128, jnp.int8) == 32          # multi-tile: int8 min
+    assert auto_block_s(9 * 128) == 8                     # f32 path unchanged
+    assert padded_lanes(9 * 128, out_dtype=jnp.bfloat16) == 16 * 128
+
+
+def test_dfr_scan_rejects_misaligned_bf16_out_tile():
+    """The compiled-shape regression gate: a sub-minimal multi-tile bf16 out
+    block raises at trace time even in interpret mode (which would otherwise
+    hide the Mosaic tiling violation until a real TPU run)."""
+    model = SiliconMR()
+    b = 9 * 128 + 17          # 10 sublanes: multi-tile at every f32 ladder tile
+    j = jnp.zeros((b, 3), jnp.float32)
+    mask = make_mask(5, seed=1)
+    s0 = jnp.zeros((b, 5), jnp.float32)
+    for bad in (1, 8):
+        with pytest.raises(ValueError, match="multiple of 16"):
+            dfr_scan(model, j, mask, s0, block_s=bad, out_dtype=jnp.bfloat16)
+    # f32 multi-tile sub-minimal blocks remain supported
+    dfr_scan(model, j, mask, s0, block_s=1)
+
+
+def test_dfr_scan_bf16_multi_tile_auto_matches_f32():
+    """Auto-tiled bf16 emission over a genuinely multi-tile batch: the fixed
+    (16, 128) out tile produces the f32 states rounded to bf16, and the
+    final-state carry stays f32 (bit-exact resume contract)."""
+    model = SiliconMR()
+    rng = np.random.default_rng(7)
+    b = 9 * 128 + 17
+    j = jnp.asarray(rng.uniform(0, 1, (b, 4)), jnp.float32)
+    mask = make_mask(5, seed=1)
+    s0 = jnp.zeros((b, 5), jnp.float32)
+    ref, fin_ref = dfr_scan(model, j, mask, s0, return_final=True)
+    out, fin = dfr_scan(model, j, mask, s0, out_dtype=jnp.bfloat16,
+                        return_final=True)
+    assert out.dtype == jnp.bfloat16 and fin.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               atol=1 / 64)
+    np.testing.assert_array_equal(np.asarray(fin), np.asarray(fin_ref))
 
 
 # ---------------------------------------------------------------------------

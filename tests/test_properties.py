@@ -1,0 +1,192 @@
+"""Property-based invariants of the streaming/online DFR machinery.
+
+The streaming fits and online sessions rest on two algebraic contracts that
+tests/test_streaming.py and tests/test_serving.py pin only at hand-picked
+chunk sizes:
+
+* **chunk-resume bit-exactness** — running the reservoir in chunks from the
+  carried final state replays the *exact* arithmetic of the uninterrupted
+  scan, for ANY split of the stream (the per-period recurrence doesn't know
+  where a chunk boundary fell);
+* **forgetting-Gram algebra** — the per-chunk λ-scan (scale carried
+  statistics by λ, accumulate the chunk) equals the closed-form λ-weighted
+  one-shot Gram Σᵢ λ^(n-1-i)·XᵢᵀXᵢ, and λ = 1.0 is bitwise the plain
+  accumulation path.
+
+This module generalises those pins across hypothesis-generated splits,
+chunk sizes and decay factors (≥ 200 examples across the suite).  Needs
+``hypothesis`` (requirements-dev.txt) — conftest.py skips the module
+gracefully when it is absent; hypothesis-free mirrors of the same
+invariants live in tests/test_serving.py so minimal images still exercise
+them at fixed points.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SiliconMR
+from repro.core.masking import make_mask
+from repro.core.reservoir import generate_states
+from repro.pipeline.ridge import _fold_chunk, _plan_fold, fit_ridge_streaming
+from repro.pipeline.session import (SessionConfig, session_init, session_solve,
+                                    session_update)
+
+MODEL = SiliconMR()
+N = 7
+B = 3
+K = 24                     # fixed stream length bounds the jit-shape universe
+MASK = make_mask(N, seed=3)
+
+
+def _stream(seed: int, k: int = K, b: int = B):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0, 1, (b, k)), jnp.float32)
+
+
+@st.composite
+def split_points(draw, k=K, max_cuts=4):
+    """1..max_cuts sorted interior cut positions of a length-k stream."""
+    n_cuts = draw(st.integers(1, max_cuts))
+    cuts = draw(st.lists(st.integers(1, k - 1), min_size=n_cuts,
+                         max_size=n_cuts, unique=True))
+    return sorted(cuts)
+
+
+# ---------------------------------------------------------------------------
+# chunk-resume bit-exactness, arbitrary splits
+# ---------------------------------------------------------------------------
+
+
+@given(cuts=split_points(), seed=st.integers(0, 20),
+       method=st.sampled_from(["fast", "kernel"]))
+@settings(max_examples=60, deadline=None)
+def test_chunked_resume_bit_exact_for_arbitrary_splits(cuts, seed, method):
+    """States and final carry of ANY chunking == the uninterrupted scan,
+    bitwise — jnp scan and Pallas kernel (interpret off-TPU) alike."""
+    j = _stream(seed)
+    full, fin_full = generate_states(MODEL, j, MASK, method=method,
+                                     return_final=True)
+    bounds = [0] + cuts + [K]
+    s = jnp.zeros((B, N), jnp.float32)
+    parts = []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        states, s = generate_states(MODEL, j[:, lo:hi], MASK, s0=s,
+                                    method=method, return_final=True)
+        parts.append(np.asarray(states))
+    np.testing.assert_array_equal(np.concatenate(parts, axis=1),
+                                  np.asarray(full))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(fin_full))
+
+
+@given(chunk=st.integers(5, 40), seed=st.integers(0, 10))
+@settings(max_examples=30, deadline=None)
+def test_streaming_fit_s_end_bit_exact_for_any_chunk(chunk, seed):
+    """fit_ridge_streaming's carry s_end is the last-period state of the
+    materialized scan for ANY chunk_k — aligned, ragged, or chunk > K."""
+    k, washout = 40, 12
+    j = _stream(seed, k=k, b=2)
+    y = _stream(seed + 100, k=k, b=2)
+    states = generate_states(MODEL, j, MASK, method="fast")
+    _, _, s_end = fit_ridge_streaming(MODEL, MASK, j, y, washout=washout,
+                                      chunk_k=chunk, lambdas=(1e-6,),
+                                      state_method="fast", use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(s_end),
+                                  np.asarray(states[:, -1, :]))
+
+
+# ---------------------------------------------------------------------------
+# forgetting-Gram algebra
+# ---------------------------------------------------------------------------
+
+F, CH, C = 9, 6, 2         # features, chunk rows, target channels
+_PLAN = _plan_fold(F, CH, use_kernel=False, block_t=512, block_f=128,
+                   state_dtype=None)
+
+
+def _chunks(seed: int, n_chunks: int):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n_chunks, B, CH, F)).astype(np.float32)
+    y = rng.standard_normal((n_chunks, B, CH, C)).astype(np.float32)
+    return x, y
+
+
+def _fold_all(x, y, lam: float):
+    g = jnp.zeros((B, F, F), jnp.float32)
+    c = jnp.zeros((B, F, C), jnp.float32)
+    y2 = jnp.zeros((B,), jnp.float32)
+    for xi, yi in zip(x, y):
+        g, c, y2 = _fold_chunk(_PLAN, g, c, y2, jnp.asarray(xi),
+                               jnp.asarray(yi), forgetting=lam)
+    return np.asarray(g), np.asarray(c), np.asarray(y2)
+
+
+@given(seed=st.integers(0, 1000), n_chunks=st.integers(1, 5),
+       lam=st.floats(0.5, 1.0, exclude_min=True))
+@settings(max_examples=100, deadline=None)
+def test_forgetting_scan_matches_closed_form_weighted_gram(seed, n_chunks, lam):
+    """λ-scan over chunks == Σᵢ λ^(n-1-i)·(XᵢᵀXᵢ, Xᵢᵀyᵢ, ‖yᵢ‖²), evaluated
+    in float64 (the scan is f32; tolerance covers association only)."""
+    x, y = _chunks(seed, n_chunks)
+    g, c, y2 = _fold_all(x, y, lam)
+    w = lam ** np.arange(n_chunks - 1, -1, -1, dtype=np.float64)
+    x64, y64 = x.astype(np.float64), y.astype(np.float64)
+    g_ref = np.einsum("n,nbtf,nbtg->bfg", w, x64, x64)
+    c_ref = np.einsum("n,nbtf,nbtc->bfc", w, x64, y64)
+    y2_ref = np.einsum("n,nbtc->b", w, y64 * y64)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(c, c_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(y2, y2_ref, rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 1000), n_chunks=st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_forgetting_one_is_bitwise_plain_accumulation(seed, n_chunks):
+    """λ = 1.0 must insert ZERO ops: bitwise the no-forgetting fold."""
+    x, y = _chunks(seed, n_chunks)
+    for a, b in zip(_fold_all(x, y, 1.0), _fold_all(x, y, 17.0 / 17.0)):
+        np.testing.assert_array_equal(a, b)
+    # and identical to a manually accumulated eager einsum
+    g, c, y2 = _fold_all(x, y, 1.0)
+    g_ref = sum(np.asarray(jnp.einsum("btf,btg->bfg", jnp.asarray(xi),
+                                      jnp.asarray(xi),
+                                      preferred_element_type=jnp.float32))
+                for xi in x)
+    np.testing.assert_array_equal(g, g_ref)
+
+
+# ---------------------------------------------------------------------------
+# online sessions == one-shot streaming fit, generated chunk sizes + decay
+# ---------------------------------------------------------------------------
+
+
+@given(chunk=st.sampled_from((6, 8, 12, 16, 24, 48)),
+       lam=st.sampled_from((1.0, 0.97)), seed=st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_session_scan_bitwise_matches_streaming_fit(chunk, lam, seed):
+    """Chunk-aligned session_update scan + solve == fit_ridge_streaming,
+    bitwise (readout, λ index, reservoir carry), for generated chunk sizes
+    and forgetting factors."""
+    k, washout = 48, 12
+    j = _stream(seed, k=k)
+    y = _stream(seed + 50, k=k)
+    w_ref, idx_ref, s_ref = fit_ridge_streaming(
+        MODEL, MASK, j, y, washout=washout, chunk_k=chunk,
+        lambdas=(1e-6, 1e-4), state_method="fast", use_kernel=False,
+        forgetting=lam)
+    cfg = SessionConfig(model=MODEL, n_nodes=N, washout=washout,
+                        ridge_l2=(1e-6, 1e-4), chunk_k=chunk, forgetting=lam,
+                        state_method="fast", use_kernel=False)
+    state = session_init(cfg, B)
+    for lo in range(0, k, chunk):
+        pad = max(0, lo + chunk - k)
+        jc = jnp.pad(j[:, lo:lo + chunk], ((0, 0), (0, pad)))
+        yc = jnp.pad(y[:, lo:lo + chunk], ((0, 0), (0, pad)))
+        nv = jnp.full((B,), min(chunk, k - lo), jnp.int32)
+        state = session_update(cfg, MASK, state, jc, yc, n_valid=nv)
+    state = session_solve(cfg, state)
+    np.testing.assert_array_equal(
+        np.asarray(w_ref).reshape(state.w.shape), np.asarray(state.w))
+    np.testing.assert_array_equal(np.asarray(idx_ref),
+                                  np.asarray(state.lam_idx))
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(state.s))

@@ -1,0 +1,371 @@
+"""Online-learning serving subsystem: sessions, forgetting, the serve loop.
+
+Pins the ISSUE 6 contracts at fixed points (the hypothesis suite in
+tests/test_properties.py generalises the same invariants across generated
+chunk splits and decay factors — this module keeps minimal images honest):
+
+* λ = 1.0 streaming fit is bit-identical to the historical path, and the
+  chunk-aligned ``session_update`` scan + solve is bit-identical to
+  ``fit_ridge_streaming`` at ANY λ — same Gram fold, same GCV solve;
+* the forgetting fold follows the closed-form λ-weighted Gram algebra;
+* ``session_step`` is honest online inference (predictions use the readout
+  solved from *earlier* chunks only) and its compiled program holds no
+  full-stream state tensor (jaxpr gates);
+* the ``DFRServer`` continuous-batching loop packs/retires/resets slots
+  correctly end to end.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SiliconMR
+from repro.core.masking import make_mask
+from repro.core.reservoir import generate_states
+from repro.pipeline.introspect import (count_pallas_calls, state_tensor_bytes,
+                                       trace_jaxpr)
+from repro.pipeline.ridge import _fold_chunk, _plan_fold, fit_ridge_streaming
+from repro.pipeline.session import (SessionConfig, _session_step, session_init,
+                                    session_predict, session_reset,
+                                    session_solve, session_step,
+                                    session_update)
+
+MODEL = SiliconMR()
+N, B, K, WASH = 16, 3, 96, 24
+LAMS = (1e-8, 1e-6, 1e-4)
+MASK = make_mask(N, seed=3)
+
+
+def _stream(seed: int, k: int = K, b: int = B):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(0, 1, (b, k)), jnp.float32)
+
+
+def _cfg(**kw) -> SessionConfig:
+    base = dict(model=MODEL, n_nodes=N, washout=WASH, ridge_l2=LAMS,
+                chunk_k=24, state_method="fast", use_kernel=False)
+    base.update(kw)
+    return SessionConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# forgetting-factor streaming fit
+# ---------------------------------------------------------------------------
+
+
+def test_forgetting_one_is_default_and_validated():
+    j, y = _stream(0), _stream(1)
+    w_a, idx_a, s_a = fit_ridge_streaming(MODEL, MASK, j, y, washout=WASH,
+                                          chunk_k=24, lambdas=LAMS,
+                                          state_method="fast", use_kernel=False)
+    w_b, idx_b, s_b = fit_ridge_streaming(MODEL, MASK, j, y, washout=WASH,
+                                          chunk_k=24, lambdas=LAMS,
+                                          state_method="fast", use_kernel=False,
+                                          forgetting=1.0)
+    np.testing.assert_array_equal(np.asarray(w_a), np.asarray(w_b))
+    np.testing.assert_array_equal(np.asarray(idx_a), np.asarray(idx_b))
+    np.testing.assert_array_equal(np.asarray(s_a), np.asarray(s_b))
+    with pytest.raises(ValueError, match="forgetting"):
+        fit_ridge_streaming(MODEL, MASK, j, y, washout=WASH, chunk_k=24,
+                            forgetting=0.0)
+    with pytest.raises(ValueError, match="noise_rel"):
+        fit_ridge_streaming(MODEL, MASK, j, y, washout=WASH, chunk_k=24,
+                            forgetting=0.9, noise_rel=0.01)
+
+
+def test_forgetting_downweights_early_chunks():
+    """With λ < 1 the fit tracks the LATE part of a stream whose target
+    mapping flips mid-way: the decayed readout must predict the second
+    mapping better than the λ = 1 readout does."""
+    from repro.pipeline.ridge import with_bias
+
+    j = _stream(3, k=2 * K)
+    states = generate_states(MODEL, j, MASK, method="fast")
+    x = with_bias(states)
+    rng = np.random.default_rng(7)
+    w_true_a = jnp.asarray(rng.standard_normal((N + 1,)), jnp.float32)
+    w_true_b = jnp.asarray(rng.standard_normal((N + 1,)), jnp.float32)
+    y = jnp.concatenate([x[:, :K] @ w_true_a, x[:, K:] @ w_true_b], axis=1)
+
+    def late_err(forgetting):
+        w, _, _ = fit_ridge_streaming(MODEL, MASK, j, y, washout=WASH,
+                                      chunk_k=24, lambdas=(1e-6,),
+                                      state_method="fast", use_kernel=False,
+                                      forgetting=forgetting)
+        pred = jnp.einsum("btf,bfc->btc", x[:, K:], w)[..., 0]
+        return float(jnp.mean((pred - y[:, K:]) ** 2))
+
+    # λ decays per *chunk* (4 chunks cover the late regime here), so a
+    # strong λ is needed for the early regime's weight to fade within K
+    assert late_err(0.5) < 0.25 * late_err(1.0)
+    assert late_err(0.9) < late_err(1.0)
+
+
+def test_forgetting_fold_matches_closed_form():
+    """Fixed-point mirror of the hypothesis property: λ-scan over chunks ==
+    float64 Σᵢ λ^(n-1-i)·XᵢᵀXᵢ; λ = 1.0 is bitwise plain accumulation."""
+    f, ch, c, n_chunks, lam = 9, 6, 2, 4, 0.9
+    plan = _plan_fold(f, ch, use_kernel=False, block_t=512, block_f=128,
+                      state_dtype=None)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n_chunks, B, ch, f)).astype(np.float32)
+    y = rng.standard_normal((n_chunks, B, ch, c)).astype(np.float32)
+
+    def fold_all(forgetting):
+        g = jnp.zeros((B, f, f), jnp.float32)
+        cv = jnp.zeros((B, f, c), jnp.float32)
+        y2 = jnp.zeros((B,), jnp.float32)
+        for xi, yi in zip(x, y):
+            g, cv, y2 = _fold_chunk(plan, g, cv, y2, jnp.asarray(xi),
+                                    jnp.asarray(yi), forgetting=forgetting)
+        return np.asarray(g), np.asarray(cv), np.asarray(y2)
+
+    g, cv, y2 = fold_all(lam)
+    w = lam ** np.arange(n_chunks - 1, -1, -1, dtype=np.float64)
+    x64, y64 = x.astype(np.float64), y.astype(np.float64)
+    np.testing.assert_allclose(g, np.einsum("n,nbtf,nbtg->bfg", w, x64, x64),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(cv, np.einsum("n,nbtf,nbtc->bfc", w, x64, y64),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(y2, np.einsum("n,nbtc->b", w, y64 * y64),
+                               rtol=1e-4, atol=1e-4)
+    # λ = 1.0: zero inserted ops — bitwise the plain fold
+    g1, cv1, y21 = fold_all(1.0)
+    g_ref = sum(np.asarray(jnp.einsum("btf,btg->bfg", jnp.asarray(xi),
+                                      jnp.asarray(xi),
+                                      preferred_element_type=jnp.float32))
+                for xi in x)
+    np.testing.assert_array_equal(g1, g_ref)
+
+
+# ---------------------------------------------------------------------------
+# sessions == streaming fit, resumability
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("lam", [1.0, 0.99])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_session_scan_bitwise_matches_streaming_fit(lam, use_kernel):
+    chunk = 24
+    j, y = _stream(5), _stream(6)
+    w_ref, idx_ref, s_ref = fit_ridge_streaming(
+        MODEL, MASK, j, y, washout=WASH, chunk_k=chunk, lambdas=LAMS,
+        state_method="fast", use_kernel=use_kernel, forgetting=lam)
+    cfg = _cfg(chunk_k=chunk, forgetting=lam, use_kernel=use_kernel)
+    state = session_init(cfg, B)
+    for lo in range(0, K, chunk):
+        state = session_update(cfg, MASK, state, j[:, lo:lo + chunk],
+                               y[:, lo:lo + chunk])
+    state = session_solve(cfg, state)
+    np.testing.assert_array_equal(
+        np.asarray(w_ref).reshape(state.w.shape), np.asarray(state.w))
+    np.testing.assert_array_equal(np.asarray(idx_ref),
+                                  np.asarray(state.lam_idx))
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(state.s))
+
+
+def test_session_chunked_resume_bit_exact_fixed_splits():
+    """Hypothesis-free mirror: arbitrary (hand-picked, tile-UNaligned) splits
+    of the reservoir scan resume bitwise from the carried state."""
+    j = _stream(9, k=30)
+    full, fin = generate_states(MODEL, j, MASK, method="fast",
+                                return_final=True)
+    for cuts in ([7], [1, 11, 12], [5, 13, 21, 29]):
+        bounds = [0] + cuts + [30]
+        s = jnp.zeros((B, N), jnp.float32)
+        parts = []
+        for lo, hi in zip(bounds[:-1], bounds[1:]):
+            states, s = generate_states(MODEL, j[:, lo:hi], MASK, s0=s,
+                                        method="fast", return_final=True)
+            parts.append(np.asarray(states))
+        np.testing.assert_array_equal(np.concatenate(parts, axis=1),
+                                      np.asarray(full))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(fin))
+
+
+def test_session_step_predictions_ignore_current_targets():
+    """Honest online inference: the tick-t prediction uses the readout from
+    ticks < t only — garbage targets in the current chunk cannot leak in."""
+    cfg = _cfg()
+    j, y = _stream(10), _stream(11)
+    st = session_init(cfg, B)
+    ck = cfg.chunk_k
+    for lo in range(0, K, ck):
+        jc, yc = j[:, lo:lo + ck], y[:, lo:lo + ck]
+        ya, st_next = session_step(cfg, MASK, st, jc, yc, refresh=True)
+        yb, _ = session_step(cfg, MASK, st, jc, 1e6 * jnp.ones_like(yc),
+                             refresh=True)
+        np.testing.assert_array_equal(np.asarray(ya), np.asarray(yb))
+        st = st_next
+
+
+def test_session_step_predict_then_update_order():
+    """A target outlier in chunk t moves predictions from chunk t+1 on, not
+    chunk t's own (predict-then-update, the RLS serving order)."""
+    cfg = _cfg(refresh_every=1)
+    j, y = _stream(12), _stream(13)
+    ck = cfg.chunk_k
+
+    def run(y_used):
+        st = session_init(cfg, B)
+        preds = []
+        for lo in range(0, K, ck):
+            p, st = session_step(cfg, MASK, st, j[:, lo:lo + ck],
+                                 y_used[:, lo:lo + ck], refresh=True)
+            preds.append(np.asarray(p))
+        return preds
+
+    y_bad = y.at[:, ck:2 * ck].add(100.0)
+    pa, pb = run(y), run(y_bad)
+    np.testing.assert_array_equal(pa[0], pb[0])
+    np.testing.assert_array_equal(pa[1], pb[1])   # its own chunk: untouched
+    assert np.max(np.abs(pa[2] - pb[2])) > 1.0    # visible one tick later
+
+
+def test_session_ragged_chunk_tail_independence():
+    """Rows past n_valid must not affect statistics or readout."""
+    cfg = _cfg()
+    j, y = _stream(14), _stream(15)
+    ck = cfg.chunk_k
+    nv = jnp.asarray([ck, ck // 2, ck // 3], jnp.int32)
+    st0 = session_init(cfg, B)
+    a = session_update(cfg, MASK, st0, j[:, :ck], y[:, :ck], n_valid=nv)
+    y_trash = y.at[:, :ck].set(1e9)
+
+    def mask_tail(arr):
+        keep = jnp.arange(ck)[None, :] < nv[:, None]
+        return jnp.where(keep, arr[:, :ck], y_trash[:, :ck])
+
+    b = session_update(cfg, MASK, st0, j[:, :ck], mask_tail(y), n_valid=nv)
+    np.testing.assert_array_equal(np.asarray(a.g), np.asarray(b.g))
+    np.testing.assert_array_equal(np.asarray(a.c), np.asarray(b.c))
+    np.testing.assert_array_equal(np.asarray(a.y2), np.asarray(b.y2))
+    np.testing.assert_array_equal(np.asarray(a.tcnt), np.asarray(b.tcnt))
+
+
+def test_session_reset_clears_only_flagged_rows():
+    cfg = _cfg()
+    j, y = _stream(16), _stream(17)
+    st = session_init(cfg, B)
+    _, st = session_step(cfg, MASK, st, j[:, :24], y[:, :24], refresh=True)
+    st2 = session_reset(st, jnp.asarray([True, False, False]))
+    for leaf, leaf2 in zip(st, st2):
+        assert not np.any(np.asarray(leaf2[0]))
+        np.testing.assert_array_equal(np.asarray(leaf2[1:]),
+                                      np.asarray(leaf[1:]))
+
+
+def test_session_predict_advances_carry_without_learning():
+    cfg = _cfg()
+    j, y = _stream(18), _stream(19)
+    st = session_init(cfg, B)
+    _, st = session_step(cfg, MASK, st, j[:, :24], y[:, :24], refresh=True)
+    y_hat, st2 = session_predict(cfg, MASK, st, j[:, 24:48])
+    assert y_hat.shape == (B, 24, 1)
+    np.testing.assert_array_equal(np.asarray(st2.g), np.asarray(st.g))
+    np.testing.assert_array_equal(np.asarray(st2.tcnt), np.asarray(st.tcnt))
+    assert int(st2.step[0]) == int(st.step[0]) + 24
+    assert not np.array_equal(np.asarray(st2.s), np.asarray(st.s))
+
+
+# ---------------------------------------------------------------------------
+# jaxpr gates: the serve step is one program, chunk-sized live state only
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("refresh", [False, True])
+def test_session_step_jaxpr_holds_no_full_stream_tensor(refresh):
+    stream_len = 4096                  # what a full-stream tensor would carry
+    cfg = _cfg(chunk_k=32)
+    b = 8
+    state = session_init(cfg, b)
+    z = jnp.zeros((b, 32), jnp.float32)
+    fn = jax.jit(_session_step, static_argnames=("cfg", "refresh"))
+    cj = trace_jaxpr(lambda st, jc, yc: fn(cfg, MASK, st, jc, yc,
+                                           refresh=refresh), state, z, z)
+    assert state_tensor_bytes(cj, stream_len, b * stream_len * N) == 0
+    # largest state-like block is the chunk itself (feature-padded budget)
+    peak = state_tensor_bytes(cj, 32, b * 32 * N)
+    assert peak <= 2 * b * 32 * 128 * 4, peak
+
+
+def test_session_step_kernel_path_single_pallas_launch_pair():
+    """use_kernel sessions run ONE dfr_scan + ONE accumulate-into Gram
+    launch per tick — no per-row or per-chunk re-launch fan-out."""
+    cfg = _cfg(chunk_k=24, state_method="kernel", use_kernel=True)
+    b = 4
+    state = session_init(cfg, b)
+    z = jnp.zeros((b, 24), jnp.float32)
+    fn = jax.jit(_session_step, static_argnames=("cfg", "refresh"))
+    cj = trace_jaxpr(lambda st, jc, yc: fn(cfg, MASK, st, jc, yc,
+                                           refresh=False), state, z, z)
+    assert count_pallas_calls(cj) == 2
+
+
+# ---------------------------------------------------------------------------
+# the continuous-batching server loop
+# ---------------------------------------------------------------------------
+
+
+def test_dfr_server_continuous_batching_end_to_end():
+    from repro.launch.serve_dfr import DFRServer, StreamRequest
+
+    cfg = _cfg(chunk_k=16, forgetting=0.99, refresh_every=2)
+    server = DFRServer(cfg, batch=2, mask_seed=0)
+    server.warmup()
+    rng = np.random.default_rng(0)
+    n_req, k = 5, 48                   # 5 streams through 2 slots: 3 waves
+    for r in range(n_req):
+        server.submit(StreamRequest(
+            rid=r, j=rng.uniform(0, 1, k).astype(np.float32),
+            y=rng.choice([-1.0, 1.0], k).astype(np.float32)))
+    server.drain()
+    assert len(server.completed) == n_req
+    assert server.active == 0 and not server.queue
+    assert sorted(r.rid for r in server.completed) == list(range(n_req))
+    for req in server.completed:
+        yh = np.concatenate(req.y_hat)
+        assert yh.shape == (k,)
+        assert np.all(np.isfinite(yh))
+    # ticks: ceil(5 streams * 3 ticks each / 2 slots) packed continuously
+    assert server.tick <= 9
+
+
+def test_dfr_server_cli_smoke(capsys):
+    from repro.launch import serve_dfr
+
+    serve_dfr.main(["--requests", "3", "--batch", "2", "--stream-len", "64",
+                    "--nodes", "16", "--washout", "16", "--chunk", "16"])
+    out = capsys.readouterr().out
+    assert "streams/s" in out and "p99" in out
+
+
+# ---------------------------------------------------------------------------
+# the drifting-link online workload (examples/online_equalization.py)
+# ---------------------------------------------------------------------------
+
+
+def test_channel_equalization_drift_task():
+    """The online workload generator: whole stream in the test split, 4-PAM
+    symbols, and a real mid-stream link change — the noise floor steps AND
+    the clean channel response differs across the drift point."""
+    from repro.core import tasks
+
+    ds = tasks.channel_equalization_drift(2000, snr_db=28.0, snr_db_after=16.0,
+                                          drift_frac=0.5, seed=0)
+    assert ds.inputs_train.shape == (0,) and ds.inputs_test.shape == (2000,)
+    assert set(np.unique(ds.targets_test)) <= {-3.0, -1.0, 1.0, 3.0}
+    # same symbols, different received signal across the drift point
+    still = tasks.channel_equalization_drift(2000, snr_db=28.0,
+                                             snr_db_after=28.0,
+                                             drift_frac=0.5, drift_taps=False,
+                                             seed=0)
+    np.testing.assert_array_equal(ds.targets_test, still.targets_test)
+    pre, post = slice(0, 1000), slice(1000, 2000)
+    np.testing.assert_array_equal(ds.inputs_test[pre], still.inputs_test[pre])
+    assert not np.array_equal(ds.inputs_test[post], still.inputs_test[post])
+    # the post-drift segment carries more noise than the un-drifted stream
+    assert np.var(ds.inputs_test[post] - still.inputs_test[post]) > 0.0
+    with pytest.raises(ValueError, match="drift_frac"):
+        tasks.channel_equalization_drift(100, drift_frac=1.0)

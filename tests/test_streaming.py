@@ -287,6 +287,93 @@ def test_streaming_metrics_only_jaxpr_no_prediction_block(narma_batch):
         assert state_tensor_bytes(cj, t_test, b * t_test * cfg.n_nodes) == 0
 
 
+def test_streaming_metrics_zero_variance_targets(narma_batch):
+    """Constant test targets after washout: the shifted in-scan moments are
+    identically zero, so var clamps to 0 and NRMSE must collapse to the
+    VAR_EPS-floored convention of the host metric — finite, not NaN (an
+    unclamped E[y²]−E[y]² can go eps-negative and NaN through sqrt), and
+    bitwise identical between metrics-only and collected modes."""
+    from repro.core.metrics import VAR_EPS
+
+    tr_in, tr_tg, te_in, te_tg = narma_batch
+    const = np.full_like(te_tg, 0.6)
+    res = Experiment(_base_cfg(stream_chunk_k=128)).run(
+        tr_in, tr_tg, te_in, const)
+    res_nc = Experiment(_base_cfg(stream_chunk_k=128,
+                                  collect_y_pred=False)).run(
+        tr_in, tr_tg, te_in, const)
+    assert res_nc.y_pred is None
+    assert np.all(np.isfinite(res.nrmse))
+    np.testing.assert_array_equal(res_nc.nrmse, res.nrmse)
+    np.testing.assert_array_equal(res_nc.ser, res.ser)
+    # gold: var == 0 → NRMSE = sqrt(mse / VAR_EPS), from the very
+    # predictions the streamed run emitted (f64 host arithmetic)
+    for i in range(te_tg.shape[0]):
+        mse = np.mean((res.y_pred[i].astype(np.float64) - 0.6) ** 2)
+        np.testing.assert_allclose(res.nrmse[i], np.sqrt(mse / VAR_EPS),
+                                   rtol=1e-3)
+
+
+def test_streaming_metrics_channel_mean_nrmse_under_chunking(narma_batch):
+    """C = 2 channels with ~1600× variance mismatch through a ragged chunk
+    grid: the reported NRMSE must be the per-channel-normalised mean (each
+    channel against its OWN in-scan variance), not a pooled T×C reduction —
+    pooling would let the offset-dominated channel mask the other."""
+    from repro.core.metrics import VAR_EPS
+
+    tr_in, tr_tg, te_in, te_tg = narma_batch
+
+    def two_ch(tg):
+        return np.stack([tg, 40.0 * tg + 7.0], axis=-1)
+
+    cfg = _base_cfg(stream_chunk_k=96, ridge_l2=(1e-4,))  # t_test % 96 != 0
+    assert te_in.shape[1] % 96 != 0
+    res = Experiment(cfg).run(tr_in, two_ch(tr_tg), te_in, two_ch(te_tg))
+    res_nc = Experiment(dataclasses.replace(cfg, collect_y_pred=False)).run(
+        tr_in, two_ch(tr_tg), te_in, two_ch(te_tg))
+    np.testing.assert_array_equal(res_nc.nrmse, res.nrmse)
+    np.testing.assert_array_equal(res_nc.ser, res.ser)
+
+    y = two_ch(te_tg).astype(np.float64)
+    yp = res.y_pred.astype(np.float64)
+    mse = np.mean((yp - y) ** 2, axis=1)                  # [B, C]
+    var = np.var(y, axis=1)                               # [B, C]
+    gold = np.mean(np.sqrt(mse / (var + VAR_EPS)), axis=-1)
+    np.testing.assert_allclose(res.nrmse, gold, rtol=1e-3)
+    # a pooled T×C normalisation (variance dominated by the inter-channel
+    # offset) would report a number several times smaller
+    pooled = np.sqrt(np.mean((yp - y) ** 2, axis=(1, 2))
+                     / (np.var(y, axis=(1, 2)) + VAR_EPS))
+    assert np.all(res.nrmse > 2.0 * pooled), (res.nrmse, pooled)
+
+
+def test_streaming_ser_ignores_padded_tail():
+    """t_test = 129 with chunk_k = 128: the final eval chunk is 127/128
+    padding.  Padded rows (zero targets, garbage predictions) must add ZERO
+    symbol mismatches, and the SER denominator must be t_test, not the
+    padded stream length.  A bias-only readout pins ŷ ≡ 2 (→ symbol 1)
+    everywhere — padding rows would quantize 0 → −1 ≠ 1 and leak ~0.98 into
+    the SER if the valid mask were dropped."""
+    from repro.pipeline.experiment import _eval_streaming, _streaming_metrics
+
+    b, n, t_test = 2, 8, 129
+    cfg = _base_cfg(n_nodes=n, stream_chunk_k=128, collect_y_pred=False,
+                    state_method="fast", readout_use_kernel=False)
+    mask = make_mask(n, seed=2)
+    rng = np.random.default_rng(0)
+    j_te = jnp.asarray(rng.uniform(0, 1, (b, t_test)), jnp.float32)
+    w_fit = jnp.zeros((b, n + 1, 1), jnp.float32).at[:, -1, 0].set(2.0)
+    s0 = jnp.zeros((b, n), jnp.float32)
+    for tgt, want in ((1.0, 0.0), (-3.0, 1.0)):
+        te_tg3 = jnp.full((b, t_test, 1), tgt, jnp.float32)
+        y_raw, acc = _eval_streaming(cfg, mask, j_te, te_tg3, w_fit, s0)
+        assert y_raw is None
+        nrmse, ser = _streaming_metrics(acc, t_test, channel_axis=False)
+        np.testing.assert_array_equal(np.asarray(ser),
+                                      np.full((b,), want, np.float32))
+        assert np.all(np.isfinite(np.asarray(nrmse)))
+
+
 # ---------------------------------------------------------------------------
 # channel_states on the kernel path (per-lane masks)
 # ---------------------------------------------------------------------------
