@@ -37,10 +37,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import (NoStateTensor, Program, check_rules,
+                            max_intermediate_bytes, state_tensor_bytes)
 from repro.core.masking import make_mask
 from repro.launch.serve_dfr import DFRServer, StreamRequest
-from repro.pipeline.introspect import (max_intermediate_bytes,
-                                       state_tensor_bytes, trace_jaxpr)
 from repro.pipeline.session import SessionConfig, _session_step, session_init
 
 from .common import csv_row
@@ -63,17 +63,19 @@ def _cfg(forgetting: float, chunk: int = CHUNK) -> SessionConfig:
                          ridge_l2=LAMS, state_method="fast")
 
 
-def _trace_step(cfg: SessionConfig, b: int, *, refresh: bool):
+def _step_program(cfg: SessionConfig, b: int, *, refresh: bool) -> Program:
     mask = make_mask(cfg.n_nodes, seed=0)
     state = session_init(cfg, b)
     ck = cfg.chunk_k
     z = jnp.zeros((b, ck), jnp.float32)
     nv = jnp.zeros((b,), jnp.int32)
     rs = jnp.zeros((b,), bool)
-    fn = jax.jit(_session_step, static_argnames=("cfg", "refresh"))
-    return trace_jaxpr(lambda st, jc, yc: fn(cfg, mask, st, jc, yc,
-                                             refresh=refresh, n_valid=nv,
-                                             reset=rs), state, z, z)
+    return Program(
+        lambda st, jc, yc: _session_step(cfg, mask, st, jc, yc,
+                                         refresh=refresh, n_valid=nv,
+                                         reset=rs),
+        (state, z, z),
+        name=f"serve_step_{'fold_solve' if refresh else 'fold'}_B{b}")
 
 
 def measure_cell(b: int, forgetting: float, *, requests: int,
@@ -82,22 +84,31 @@ def measure_cell(b: int, forgetting: float, *, requests: int,
     n, ck = cfg.n_nodes, cfg.chunk_k
 
     # jaxpr gates: both step variants, measured against the chunk budget and
-    # the would-be full-stream tensor
+    # the would-be full-stream tensor — the shared repro.analysis rules
+    fp = -(-(n + 1) // 128) * 128
+    budget = b * ck * fp * 4
     gates = {}
     for refresh, tag in ((False, "fold"), (True, "fold_solve")):
-        cj = _trace_step(cfg, b, refresh=refresh)
+        prog = _step_program(cfg, b, refresh=refresh)
+        cj = prog.closed_jaxpr
+        violations = check_rules(prog, [
+            NoStateTensor(stream_len, b * stream_len * n,
+                          what="full-stream state tensor"),
+            NoStateTensor(ck, b * ck * n, max_bytes=2 * budget,
+                          what="chunk state block"),
+        ])
         gates[tag] = {
             "peak_state_bytes": state_tensor_bytes(cj, ck, b * ck * n),
             "full_stream_state_bytes": state_tensor_bytes(
                 cj, stream_len, b * stream_len * n),
             "peak_any_bytes": max_intermediate_bytes(cj),
+            "contract_violations": [str(v) for v in violations],
         }
-    fp = -(-(n + 1) // 128) * 128
     entry = {
         "b": b, "forgetting": forgetting, "nodes": n, "chunk": ck,
         "stream_len": stream_len, "requests": requests,
         "refresh_every": cfg.refresh_every,
-        "chunk_budget_bytes": b * ck * fp * 4,
+        "chunk_budget_bytes": budget,
         "step": gates,
         "timed": bool(timed),
     }
@@ -137,16 +148,12 @@ def check(report: dict) -> list[str]:
     for e in report["cells"]:
         by_b.setdefault(e["b"], []).append(e)
         for tag, g in e["step"].items():
-            if g["full_stream_state_bytes"]:
+            # memory-shape gates are the shared repro.analysis rules,
+            # evaluated at measure time and serialized with the cell
+            for v in g["contract_violations"]:
                 failures.append(
-                    f"serve step ({tag}) materialises a full-stream state "
-                    f"tensor at B={e['b']} lam={e['forgetting']}")
-            if g["peak_state_bytes"] > 2 * e["chunk_budget_bytes"]:
-                failures.append(
-                    f"serve step ({tag}) peak state bytes "
-                    f"{g['peak_state_bytes']} exceed 2x chunk budget "
-                    f"{e['chunk_budget_bytes']} at B={e['b']} "
-                    f"lam={e['forgetting']}")
+                    f"serve step ({tag}) contract at B={e['b']} "
+                    f"lam={e['forgetting']}: {v}")
     for b, cells in by_b.items():
         peaks = {json.dumps({t: {k: g[k] for k in
                                  ("peak_state_bytes", "full_stream_state_bytes")}

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import (MaxPallasCalls, Program, VmemBudget, check_rules,
+                            pallas_eqns)
 from repro.core import SiliconMR, make_mask
 from repro.kernels.dfr_scan import auto_block_s, dfr_scan, padded_lanes
 from repro.kernels.ridge_gram import gram_accumulate, gram_accumulate_batched
@@ -84,12 +86,48 @@ def readout_section(*, t: int, f: int, iters: int) -> list[dict]:
     return entries
 
 
+def readout_contracts(*, t: int, f: int) -> list[dict]:
+    """Static contracts for the batched Gram: ONE launch whose per-block VMEM
+    estimate must fit the budget and stay B-independent.
+
+    The B-independence column is the device-memory half of the interpret-mode
+    anomaly diagnosis (DESIGN.md §11): the kernel's working set does not grow
+    with B, so the batched path's wall-time blow-up at large B in the readout
+    section above can only come from the grid emulation, not the memory model
+    the kernel compiles to.
+    """
+    entries = []
+    for b in BATCHES:
+        x = jnp.zeros((b, t, f), jnp.float32)
+        y = jnp.zeros((b, t, 1), jnp.float32)
+        prog = Program(gram_accumulate_batched, (x, y),
+                       name=f"batched_gram_B{b}")
+        vmem = [VmemBudget.estimate_bytes(eqn)
+                for eqn, _ in pallas_eqns(prog.closed_jaxpr)]
+        violations = check_rules(prog, [MaxPallasCalls(1), VmemBudget()])
+        entries.append({
+            "batch": b,
+            "vmem_block_bytes": max(vmem) if vmem else 0,
+            "contract_violations": [str(v) for v in violations],
+        })
+    return entries
+
+
 def check(report: dict) -> list[str]:
-    """Gate the batching fix: auto-tiling must not over-pad small sweeps."""
+    """Gate the batching fix: auto-tiling must not over-pad small sweeps, and
+    the batched Gram launch must honour its static contracts."""
     failures = []
     for e in report["reservoir"]:
         if e["tiling"] == "auto" and e["batch"] <= 128 and e["lanes"] > 128:
             failures.append(f"auto tiling at B={e['batch']} pads to {e['lanes']} lanes (> 128)")
+    for e in report.get("readout_contracts", []):
+        for v in e["contract_violations"]:
+            failures.append(f"batched Gram contract at B={e['batch']}: {v}")
+    sizes = {e["vmem_block_bytes"] for e in report.get("readout_contracts", [])}
+    if len(sizes) > 1:
+        failures.append(
+            f"batched Gram VMEM block estimate varies with B: {sorted(sizes)} "
+            f"— the launch working set must be batch-independent")
     return failures
 
 
@@ -101,6 +139,7 @@ def build_report(*, smoke: bool) -> dict:
                    "reservoir": {"K": k, "N": n}, "readout": {"T": t, "F": f}},
         "reservoir": reservoir_section(k=k, n=n, iters=iters),
         "readout": readout_section(t=t, f=f, iters=iters),
+        "readout_contracts": readout_contracts(t=t, f=f),
     }
 
 

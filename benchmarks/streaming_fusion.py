@@ -10,7 +10,7 @@ states folded into running Gram stacks, so the largest live state block is
 the (lane-padded) chunk.
 
 Two memory numbers per cell, both derived from the traced jaxpr
-(``pipeline/introspect``) so they are exact on any backend:
+(``repro.analysis``) so they are exact on any backend:
 
 * ``peak_state_bytes`` — largest intermediate with a stream axis alongside a
   node/feature axis (the tensor class the streaming path exists to kill);
@@ -42,11 +42,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import (MaxScans, NoStateTensor, Program, check_rules,
+                            max_intermediate_bytes, state_tensor_bytes)
 from repro.core import SiliconMR, make_mask
 from repro.core.reservoir import generate_states
 from repro.kernels.dfr_scan import padded_lanes
-from repro.pipeline.introspect import (max_intermediate_bytes,
-                                       state_tensor_bytes, trace_jaxpr)
 from repro.pipeline.ridge import fit_ridge_batched, fit_ridge_streaming
 
 from .common import csv_row, stack_datasets, time_fn
@@ -93,11 +93,21 @@ def measure_cell(n: int, t: int, b: int, *, chunk: int | None = None,
     j = jnp.zeros((b, t), jnp.float32)
     y = jnp.zeros((b, t), jnp.float32)
 
-    cj_m = trace_jaxpr(mat, j, y)
-    cj_s = trace_jaxpr(stream, j, y)
+    prog_m = Program(mat, (j, y), name=f"materialized_N{n}_T{t}_B{b}")
+    prog_s = Program(stream, (j, y), name=f"streamed_N{n}_T{t}_B{b}")
+    cj_m, cj_s = prog_m.closed_jaxpr, prog_s.closed_jaxpr
     # chunk budget = lane-padded batch × chunk × feature-tile-padded F, the
     # largest state block the streamed path is *allowed* to keep live
     fp = -(-(n + 1) // 128) * 128
+    budget = padded_lanes(b) * chunk * fp * 4
+    # the shared contract set (same rules the tier-1 tests run): one chunk
+    # scan, no full-T tensor, chunk blocks within 2x the budget
+    violations = check_rules(prog_s, [
+        MaxScans(1),
+        NoStateTensor(t, b * t * n, what="full-T state tensor"),
+        NoStateTensor(chunk, b * chunk * n, max_bytes=2 * budget,
+                      what="chunk state block"),
+    ])
     entry = {
         "n": n, "t": t, "b": b, "chunk": chunk,
         "materialized": {
@@ -108,7 +118,8 @@ def measure_cell(n: int, t: int, b: int, *, chunk: int | None = None,
             "peak_state_bytes": state_tensor_bytes(cj_s, chunk, b * chunk * n),
             "peak_any_bytes": max_intermediate_bytes(cj_s),
             "full_t_state_bytes": state_tensor_bytes(cj_s, t, b * t * n),
-            "chunk_budget_bytes": padded_lanes(b) * chunk * fp * 4,
+            "chunk_budget_bytes": budget,
+            "contract_violations": [str(v) for v in violations],
         },
     }
     entry["state_bytes_ratio"] = round(
@@ -156,15 +167,11 @@ def check(report: dict) -> list[str]:
     failures = []
     for e in report["cells"]:
         s = e["streamed"]
-        if s["full_t_state_bytes"]:
+        # memory-shape gates are the shared repro.analysis rules, evaluated
+        # at measure time and serialized with the cell
+        for v in s["contract_violations"]:
             failures.append(
-                f"streamed path materializes a full-T state tensor at "
-                f"N={e['n']} T={e['t']} B={e['b']}")
-        if s["peak_state_bytes"] > 2 * s["chunk_budget_bytes"]:
-            failures.append(
-                f"streamed peak state bytes {s['peak_state_bytes']} exceed 2x "
-                f"chunk budget {s['chunk_budget_bytes']} at "
-                f"N={e['n']} T={e['t']} B={e['b']}")
+                f"streamed contract at N={e['n']} T={e['t']} B={e['b']}: {v}")
         if (report["config"]["backend"] == "tpu" and e["b"] == 64
                 and e.get("timed")
                 and s["wall_us"] > e["materialized"]["wall_us"]):

@@ -12,7 +12,7 @@ folds per-channel Gram stacks, so the largest live state block is the
 (lane-padded) chunk — independent of K.  `stream_state_dtype="bfloat16"`
 additionally halves the chunk's HBM round-trip (DESIGN.md §9).
 
-Memory numbers are derived from the traced jaxpr (`pipeline/introspect`), so
+Memory numbers are derived from the traced jaxpr (`repro.analysis`), so
 they are exact on any backend; wall times are measured only where the
 backend can afford them (every cell on TPU, the small cells in interpret
 mode — byte columns are what CI gates on).
@@ -39,11 +39,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import (MaxPallasCalls, MaxScans, NoStateTensor, Program,
+                            check_rules, max_intermediate_bytes,
+                            state_tensor_bytes)
 from repro.core import SiliconMR, make_mask
 from repro.kernels.dfr_scan import padded_lanes
 from repro.pipeline import channel_states, fit_ridge_batched, fit_ridge_streaming_wdm
-from repro.pipeline.introspect import (max_intermediate_bytes,
-                                       state_tensor_bytes, trace_jaxpr)
 
 from .common import csv_row, stack_datasets, time_fn
 
@@ -97,15 +98,26 @@ def measure_cell(r: int, k: int, *, n: int = N_NODES,
     j = jnp.zeros((r, k), jnp.float32)
     y = jnp.zeros((r, k), jnp.float32)
 
-    cj_m = trace_jaxpr(mat, j, y)
-    cj_s = trace_jaxpr(stream, j, y)
+    tag = state_dtype or "float32"
+    prog_m = Program(mat, (j, y), name=f"wdm_materialized_R{r}_K{k}_{tag}")
+    prog_s = Program(stream, (j, y), name=f"wdm_streamed_R{r}_K{k}_{tag}")
+    cj_m, cj_s = prog_m.closed_jaxpr, prog_s.closed_jaxpr
     # chunk budget = lane-padded channels x chunk x feature-tile-padded F at
     # the chunk dtype — the largest state block the streamed path may keep
     itemsize = jnp.dtype(state_dtype or jnp.float32).itemsize
     fp = -(-(n + 1) // 128) * 128
+    budget = padded_lanes(r) * chunk * fp * itemsize
+    # the shared contract set (same rules the tier-1 tests run): one chunk
+    # scan, ONE launch pair, no full-K tensor, chunk blocks within 2x budget
+    violations = check_rules(prog_s, [
+        MaxScans(1), MaxPallasCalls(2),
+        NoStateTensor(k, r * k * n, what="full-K state tensor"),
+        NoStateTensor(chunk, r * chunk * n, max_bytes=2 * budget,
+                      what="chunk state block"),
+    ])
     entry = {
         "r": r, "k": k, "n": n, "chunk": chunk,
-        "state_dtype": state_dtype or "float32",
+        "state_dtype": tag,
         "materialized": {
             "peak_state_bytes": state_tensor_bytes(cj_m, k, r * k * n),
             "peak_any_bytes": max_intermediate_bytes(cj_m),
@@ -114,7 +126,8 @@ def measure_cell(r: int, k: int, *, n: int = N_NODES,
             "peak_state_bytes": state_tensor_bytes(cj_s, chunk, r * chunk * n),
             "peak_any_bytes": max_intermediate_bytes(cj_s),
             "full_k_state_bytes": state_tensor_bytes(cj_s, k, r * k * n),
-            "chunk_budget_bytes": padded_lanes(r) * chunk * fp * itemsize,
+            "chunk_budget_bytes": budget,
+            "contract_violations": [str(v) for v in violations],
         },
     }
     entry["state_bytes_ratio"] = round(
@@ -174,13 +187,10 @@ def check(report: dict) -> list[str]:
         s = e["streamed"]
         by_key[(e["r"], e["k"], e["state_dtype"])] = s
         where = f"R={e['r']} K={e['k']} dtype={e['state_dtype']}"
-        if s["full_k_state_bytes"]:
-            failures.append(
-                f"streamed WDM path materializes a full-K state tensor at {where}")
-        if s["peak_state_bytes"] > 2 * s["chunk_budget_bytes"]:
-            failures.append(
-                f"streamed peak state bytes {s['peak_state_bytes']} exceed 2x "
-                f"chunk budget {s['chunk_budget_bytes']} at {where}")
+        # memory-shape gates are the shared repro.analysis rules, evaluated
+        # at measure time and serialized with the cell
+        for v in s["contract_violations"]:
+            failures.append(f"streamed WDM contract at {where}: {v}")
         if (report["config"]["backend"] == "tpu" and e["r"] >= 16
                 and e.get("timed")
                 and s["wall_us"] > e["materialized"]["wall_us"]):

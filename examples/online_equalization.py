@@ -23,8 +23,8 @@ before that chunk arrived — no lookahead).
   PYTHONPATH=src python examples/online_equalization.py
 """
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import SiliconMR, make_mask, tasks
 from repro.core.tasks import quantize_symbols

@@ -1,0 +1,100 @@
+"""``python -m repro.analysis``: trace every registered entry point, evaluate
+its contract set, write ANALYSIS_report.json, exit nonzero on violation.
+
+Runs trace-only (tiny shapes, no execution), so it is cheap enough to gate
+every CI run.  ``--entry-point`` filters the registry (the latest-jax canary
+uses it to probe specific paths); ``--seed-violation`` adds a deliberately
+broken entry so CI can assert the gate actually fails.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import traceback
+
+import jax
+
+from .registry import entry_point_names, get_entry_points
+
+
+def analyze_entry(entry) -> dict:
+    """Build + check one entry point; never raises (a trace failure is
+    itself a reportable violation of the "this entry point traces" contract)."""
+    try:
+        program, rules = entry.build()
+        rule_results = []
+        n_viol = 0
+        for rule in rules:
+            viols = rule.check(program)
+            n_viol += len(viols)
+            rule_results.append({
+                "rule": rule.describe(),
+                "ok": not viols,
+                "violations": [v.as_dict() for v in viols],
+            })
+        return {"name": entry.name, "description": entry.description,
+                "ok": n_viol == 0, "n_violations": n_viol,
+                "rules": rule_results}
+    except Exception:
+        return {"name": entry.name, "description": entry.description,
+                "ok": False, "n_violations": 1, "rules": [],
+                "error": traceback.format_exc(limit=8)}
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static program-contract checker (DESIGN.md §11).")
+    parser.add_argument("--entry-point", action="append", default=None,
+                        metavar="NAME",
+                        help="check only NAME (repeatable; default: all)")
+    parser.add_argument("--out", default="ANALYSIS_report.json",
+                        help="report path (default: %(default)s)")
+    parser.add_argument("--list", action="store_true",
+                        help="list registered entry points and exit")
+    parser.add_argument("--seed-violation", action="store_true",
+                        help="add a deliberately violating entry point "
+                             "(gate self-test: exit must be nonzero)")
+    args = parser.parse_args(argv)
+
+    if args.list:
+        for name in entry_point_names():
+            print(name)
+        return 0
+
+    entries = get_entry_points(args.entry_point,
+                               include_seeded=args.seed_violation)
+    results = []
+    for entry in entries:
+        res = analyze_entry(entry)
+        results.append(res)
+        status = "ok" if res["ok"] else "FAIL"
+        print(f"[{status}] {res['name']}: {len(res['rules'])} rules, "
+              f"{res['n_violations']} violation(s)")
+        if "error" in res:
+            print(f"    trace error:\n{res['error']}")
+        for rr in res["rules"]:
+            for v in rr["violations"]:
+                where = "/".join(v.get("path", [])) or "<top>"
+                print(f"    {v['rule']}: {v['message']}  [at {where}]")
+
+    n_viol = sum(r["n_violations"] for r in results)
+    report = {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "ok": n_viol == 0,
+        "n_violations": n_viol,
+        "entry_points": results,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+        fh.write("\n")
+    print(f"{len(results)} entry point(s), {n_viol} violation(s) "
+          f"-> {args.out}")
+    return 1 if n_viol else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

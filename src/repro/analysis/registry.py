@@ -1,0 +1,280 @@
+"""Entry-point registry: every compiled hot path, with its contract set.
+
+Each entry point is a builder that constructs the callable on *tiny* shapes
+(tracing cost only — nothing executes) and declares the rules the program
+must satisfy.  `python -m repro.analysis` traces them all; tests and CI
+treat a violation as a broken structural claim, the same way a failing
+parity test is a broken numerical claim.
+
+Registering a new entry point (DESIGN.md §11): write a builder that closes
+over static config and returns ``(Program, rules)``, decorate it with
+``@register(name, description)``.  Keep shapes minimal — the walker scales
+with program size, and the properties being checked are shape-generic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .rules import (DonationHonored, MaxPallasCalls, MaxScans, NoDtypeAbove,
+                    NoHostCallback, NoSilentUpcast, NoStateTensor, Program,
+                    VmemBudget)
+
+# Tiny trace shapes shared by the pipeline entries.
+_B, _N, _T_TR, _T_TE, _CHUNK, _W0 = 2, 16, 96, 64, 32, 16
+_LAMS = (1e-6, 1e-4)
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    name: str
+    description: str
+    build: object          # () -> (Program, tuple[Rule, ...])
+
+
+ENTRY_POINTS = {}
+
+
+def register(name: str, description: str):
+    def deco(fn):
+        ENTRY_POINTS[name] = EntryPoint(name, description, fn)
+        return fn
+    return deco
+
+
+def _padded_f(n_nodes: int) -> int:
+    """Feature count padded to the Gram kernel's 128-lane tile."""
+    return -(-(n_nodes + 1) // 128) * 128
+
+
+def _experiment_setup(**cfg_kw):
+    from repro.pipeline import Experiment, ExperimentConfig
+    from repro.core import SiliconMR
+    base = dict(model=SiliconMR(), n_nodes=_N, washout=_W0, ridge_l2=_LAMS,
+                state_noise_rel=0.0)
+    base.update(cfg_kw)
+    cfg = ExperimentConfig(**base)
+    mask = Experiment(cfg).mask
+    args = (jnp.zeros((_B, _T_TR), jnp.float32),
+            jnp.zeros((_B, _T_TR), jnp.float32),
+            jnp.zeros((_B, _T_TE), jnp.float32),
+            jnp.zeros((_B, _T_TE), jnp.float32))
+    return cfg, mask, args
+
+
+def _pipeline_program(name, **cfg_kw):
+    from repro.pipeline.experiment import _run_pipeline
+    cfg, mask, args = _experiment_setup(**cfg_kw)
+    return Program(lambda a, b, c, d: _run_pipeline(cfg, mask, a, b, c, d),
+                   args, name=name)
+
+
+@register("experiment_ref",
+          "Experiment pipeline, reference reservoir, jnp readout")
+def _experiment_ref():
+    prog = _pipeline_program("experiment_ref", state_method="ref",
+                             readout_use_kernel=False)
+    return prog, (NoHostCallback(), NoDtypeAbove("float32"),
+                  MaxPallasCalls(0))
+
+
+@register("experiment_fast",
+          "Experiment pipeline, vectorised jnp reservoir, jnp readout")
+def _experiment_fast():
+    prog = _pipeline_program("experiment_fast", state_method="fast",
+                             readout_use_kernel=False)
+    return prog, (NoHostCallback(), NoDtypeAbove("float32"),
+                  MaxPallasCalls(0))
+
+
+@register("experiment_kernel",
+          "Experiment pipeline, materialized Pallas path (dfr_scan + Gram)")
+def _experiment_kernel():
+    prog = _pipeline_program("experiment_kernel", state_method="kernel",
+                             readout_use_kernel=True)
+    # train dfr_scan + test dfr_scan + one batched Gram launch
+    return prog, (NoHostCallback(), NoDtypeAbove("float32"),
+                  MaxPallasCalls(3), VmemBudget())
+
+
+@register("experiment_streaming",
+          "Experiment pipeline, streamed fit + eval (no [B,T,N] tensor)")
+def _experiment_streaming():
+    prog = _pipeline_program("experiment_streaming", state_method="kernel",
+                             readout_use_kernel=True, stream_chunk_k=_CHUNK)
+    rules = (NoHostCallback(), NoDtypeAbove("float32"),
+             MaxScans(2),               # one fit scan + one eval scan
+             VmemBudget(),
+             NoStateTensor(_T_TR, _B * _T_TR * _N, what="train state tensor"),
+             NoStateTensor(_T_TE, _B * _T_TE * _N, what="test state tensor"))
+    return prog, rules
+
+
+def _streaming_fit_program(name, *, wdm=False, state_dtype=None):
+    from repro.core import SiliconMR, make_mask
+    from repro.pipeline import fit_ridge_streaming, fit_ridge_streaming_wdm
+    model = SiliconMR()
+    kw = dict(washout=_W0, chunk_k=_CHUNK, lambdas=_LAMS,
+              state_method="kernel", use_kernel=True)
+    if state_dtype is not None:
+        kw["state_dtype"] = state_dtype
+    j = jnp.zeros((_B, _T_TR), jnp.float32)
+    y = jnp.zeros((_B, _T_TR), jnp.float32)
+    if wdm:
+        masks = jnp.stack([make_mask(_N, seed=30 + i) for i in range(_B)])
+        fn = lambda jj, yy: fit_ridge_streaming_wdm(model, masks, jj, yy, **kw)
+    else:
+        mask = make_mask(_N, seed=1)
+        fn = lambda jj, yy: fit_ridge_streaming(model, mask, jj, yy, **kw)
+    return Program(fn, (j, y), name=name)
+
+
+def _streaming_fit_rules():
+    return (NoHostCallback(), NoDtypeAbove("float32"),
+            MaxScans(1), MaxPallasCalls(2),        # dfr_scan + Gram per chunk
+            VmemBudget(),
+            NoStateTensor(_T_TR, _B * _T_TR * _N, what="full-stream tensor"),
+            DonationHonored(min_pallas_aliases=2))  # accumulate-into Gram
+
+
+@register("fit_ridge_streaming",
+          "Streamed ridge fit: ONE chunk scan, accumulate-into Gram")
+def _fit_ridge_streaming():
+    return (_streaming_fit_program("fit_ridge_streaming"),
+            _streaming_fit_rules())
+
+
+@register("fit_ridge_streaming_bf16",
+          "Streamed ridge fit with bf16 state chunks (no silent f32 chunk)")
+def _fit_ridge_streaming_bf16():
+    from repro.kernels.dfr_scan import padded_lanes
+    prog = _streaming_fit_program("fit_ridge_streaming_bf16",
+                                  state_dtype="bfloat16")
+    # The f32 final-state carry [B, N] and the lane-padded input chunk
+    # (O(B_pad·chunk), no node axis) are legitimate; a wide block at
+    # state-chunk scale — padded-batch × chunk × nodes — is not.
+    floor = padded_lanes(_B) * _CHUNK * _N
+    rules = _streaming_fit_rules() + (
+        NoSilentUpcast(_CHUNK, floor),)
+    return prog, rules
+
+
+@register("fit_ridge_streaming_wdm",
+          "WDM streamed fit: all channels in ONE launch pair per chunk")
+def _fit_ridge_streaming_wdm():
+    return (_streaming_fit_program("fit_ridge_streaming_wdm", wdm=True),
+            _streaming_fit_rules())
+
+
+def _session_program(name, *, refresh, donate=False, **cfg_kw):
+    from repro.core import make_mask
+    from repro.pipeline.session import (SessionConfig, _session_step,
+                                        session_init)
+    cfg = SessionConfig(n_nodes=_N, chunk_k=_CHUNK, **cfg_kw)
+    mask = make_mask(cfg.n_nodes, seed=0)
+    state = session_init(cfg, _B)
+    z = jnp.zeros((_B, _CHUNK), jnp.float32)
+    fn = lambda st, jc, yc: _session_step(cfg, mask, st, jc, yc,
+                                          refresh=refresh)
+    return Program(fn, (state, z, z), name=name,
+                   donate_argnums=(0,) if donate else ())
+
+
+_SESSION_RULES = (NoHostCallback(), NoDtypeAbove("float32"),
+                  NoStateTensor(4096, _B * 4096 * _N,
+                                what="full-stream tensor"))
+
+
+@register("session_step", "Online session tick (carry + Gram fold)")
+def _session_step_entry():
+    return _session_program("session_step", refresh=False), _SESSION_RULES
+
+
+@register("session_step_refresh",
+          "Online session tick with in-graph weight refresh (GCV solve)")
+def _session_step_refresh():
+    return (_session_program("session_step_refresh", refresh=True),
+            _SESSION_RULES)
+
+
+@register("session_step_kernel",
+          "Online session tick on the Pallas path (one launch pair)")
+def _session_step_kernel():
+    prog = _session_program("session_step_kernel", refresh=False,
+                            state_method="kernel", use_kernel=True)
+    return prog, _SESSION_RULES + (MaxPallasCalls(2), VmemBudget(),
+                                   DonationHonored(min_pallas_aliases=2))
+
+
+@register("serve_dfr_step",
+          "DFRServer donated step: the SessionState slab updates in place")
+def _serve_dfr_step():
+    prog = _session_program("serve_dfr_step", refresh=True, donate=True,
+                            forgetting=0.99)
+    # All 8 SessionState leaves must come back donated in the lowered
+    # program — a silently dropped donation doubles the serving slab.
+    return prog, _SESSION_RULES + (DonationHonored(),)
+
+
+@register("reservoir_lm_train_step",
+          "reservoir_lm train step (grad-accum scan, donated TrainState)")
+def _reservoir_lm_train_step():
+    from repro.configs import smoke_config
+    from repro.optim import AdamWConfig
+    from repro.runtime.steps import init_train_state, train_step
+    cfg = smoke_config("reservoir_lm")
+    opt = AdamWConfig()
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    b, s = 2 * max(1, cfg.microbatches), 16
+    batch = {"tokens": jnp.zeros((b, s), jnp.int32),
+             "labels": jnp.zeros((b, s), jnp.int32)}
+    prog = Program(lambda st, bt: train_step(cfg, opt, st, bt),
+                   (state, batch), name="reservoir_lm_train_step",
+                   donate_argnums=(0,))
+    return prog, (NoHostCallback(), NoDtypeAbove("float32"),
+                  MaxPallasCalls(0), DonationHonored())
+
+
+def seeded_violation_entry() -> EntryPoint:
+    """A deliberately violating entry (materialized [B, T, N] state tensor
+    under `NoStateTensor`) — CI runs it to prove the gate exits nonzero."""
+    def build():
+        from repro.core import SiliconMR, make_mask
+        from repro.core.reservoir import generate_states
+        from repro.pipeline import fit_ridge_batched
+        model = SiliconMR()
+        mask = make_mask(_N, seed=1)
+
+        def fit(j, y):
+            st = generate_states(model, j, mask, method="fast")
+            return fit_ridge_batched(st[:, _W0:], y[:, _W0:], lambdas=_LAMS,
+                                     use_kernel=False)
+
+        j = jnp.zeros((_B, _T_TR), jnp.float32)
+        prog = Program(fit, (j, j), name="seeded_violation")
+        return prog, (NoStateTensor(_T_TR, _B * _T_TR * _N),)
+    return EntryPoint("seeded_violation",
+                      "Deliberate NoStateTensor violation (gate self-test)",
+                      build)
+
+
+def entry_point_names() -> list:
+    return sorted(ENTRY_POINTS)
+
+
+def get_entry_points(names=None, *, include_seeded=False) -> list:
+    """Resolve ``names`` (None = all registered) to EntryPoint objects."""
+    eps = dict(ENTRY_POINTS)
+    if include_seeded:
+        seeded = seeded_violation_entry()
+        eps[seeded.name] = seeded
+    if names is None:
+        return [eps[n] for n in sorted(eps)]
+    missing = [n for n in names if n not in eps]
+    if missing:
+        raise KeyError(f"unknown entry point(s) {missing}; "
+                       f"known: {sorted(eps)}")
+    return [eps[n] for n in names]

@@ -84,7 +84,8 @@ class CheckpointStore:
                 np.save(f, leaf, allow_pickle=False)
             digest = hashlib.sha256(path.read_bytes()).hexdigest()
             manifest["leaves"].append(
-                {"name": name, "sha256": digest, "shape": list(leaf.shape), "dtype": str(leaf.dtype)}
+                {"name": name, "sha256": digest, "shape": list(leaf.shape),
+                 "dtype": str(leaf.dtype)}
             )
         (tmp / "manifest.json").write_text(json.dumps(manifest))
         if final.exists():
@@ -145,6 +146,7 @@ class CheckpointStore:
                 continue
             if sharding_tree is not None:
                 sh_leaves = _flatten(sharding_tree)[0]
-                leaves = [jax.device_put(l, sh) for l, sh in zip(leaves, sh_leaves)]
+                leaves = [jax.device_put(lf, sh)
+                          for lf, sh in zip(leaves, sh_leaves)]
             return s, jax.tree_util.tree_unflatten(treedef, leaves)
         return None, None

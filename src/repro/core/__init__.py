@@ -1,12 +1,12 @@
 """Paper core: silicon-MR delayed-feedback reservoir computing in JAX."""
 
+from . import power, tasks, timing
 from .accelerator import DFRCAccelerator, DFRCConfig
 from .masking import make_mask, masked_input, mls_sequence, sample_and_hold
 from .metrics import nrmse, ser
 from .nonlinear import MZISine, MackeyGlass, NLModel, SiliconMR, SiliconMRLiteral
 from .readout import Readout, fit_readout
 from .reservoir import generate_channel_states, generate_states, init_state
-from . import power, tasks, timing
 
 __all__ = [
     "DFRCAccelerator",

@@ -16,8 +16,8 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from .masking import make_mask, sample_and_hold
 from .metrics import nrmse, ser

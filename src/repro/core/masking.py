@@ -16,8 +16,8 @@ et al. do the same truncation).
 
 from __future__ import annotations
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 # Primitive polynomial taps (1-indexed exponents of the feedback polynomial)
 # for register lengths 2..16, from the standard Fibonacci-form tables (Xilinx

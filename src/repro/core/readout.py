@@ -17,8 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass

@@ -30,7 +30,6 @@ Writes experiments/dryrun/calib__<arch>__<shape>__pod.json.
 import argparse
 import dataclasses
 import json
-import pathlib
 import time
 
 import jax

@@ -27,9 +27,9 @@ import re
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import get_config, input_specs, list_archs, runnable_cells, SHAPES
+from repro.configs import (SHAPES, get_config, input_specs, list_archs,
+                           runnable_cells)
 from repro.launch.mesh import make_production_mesh
 from repro.optim import AdamWConfig
 from repro.parallel.sharding import (
@@ -119,7 +119,8 @@ def build_step(cfg, shape: str, mesh, specs=None):
     if kind == "train":
         opt_cfg = AdamWConfig()
         state_shapes = jax.eval_shape(
-            lambda: __import__("repro.runtime.steps", fromlist=["init_train_state"]).init_train_state(
+            lambda: __import__("repro.runtime.steps",
+                               fromlist=["init_train_state"]).init_train_state(
                 cfg, jax.random.PRNGKey(0)
             )
         )

@@ -19,11 +19,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import use_mesh
 from repro.configs import get_config
 from repro.launch.mesh import make_debug_mesh
 from repro.models import init_params
 from repro.runtime.steps import serve_decode, serve_prefill
-from repro.compat import use_mesh
 
 
 def reduced_config(cfg, d_model=128, layers=2, vocab=512):

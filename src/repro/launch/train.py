@@ -18,8 +18,8 @@ import dataclasses
 import logging
 
 import jax
-import jax.numpy as jnp
 
+from repro.compat import shardings_for, use_mesh
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
@@ -27,7 +27,6 @@ from repro.optim import AdamWConfig
 from repro.parallel.sharding import batch_pspec, named, param_pspecs
 from repro.runtime.steps import init_train_state, train_step
 from repro.runtime.trainer import TrainLoopConfig, run_training
-from repro.compat import shardings_for, use_mesh
 
 
 def reduced_config(cfg, args):

@@ -102,7 +102,8 @@ def init_params(cfg: ModelConfig, key) -> dict:
         enc_unit = (BlockSpec("attn", "dense"),)
         params["encoder"] = {
             "units": stacked_unit(keys[3], enc_unit, cfg.n_encoder_layers),
-            "final_norm": layers.init_from_defs(layers.norm_defs(cfg), jax.random.fold_in(keys[3], 7)),
+            "final_norm": layers.init_from_defs(
+                layers.norm_defs(cfg), jax.random.fold_in(keys[3], 7)),
         }
     return params
 
@@ -149,7 +150,8 @@ def _apply_block(cfg, blk, p, x, *, positions, context=None, cache=None):
     mp = _split(p, "mixer")
     new_cache = None
     if blk.mixer == "attn":
-        y, new_cache = layers.apply_attn(cfg, mp, h, positions=positions, cache=cache, causal=cfg.causal)
+        y, new_cache = layers.apply_attn(cfg, mp, h, positions=positions,
+                                         cache=cache, causal=cfg.causal)
     elif blk.mixer == "cross_attn":
         if cache is not None:
             ctx_kv = cache  # precomputed at prefill
@@ -218,7 +220,8 @@ def forward(cfg: ModelConfig, params: dict, tokens, *, context=None):
     def unit_step(carry, unit_params):
         x, aux = carry
         for pos, blk in enumerate(cfg.unit):
-            x, _, a = _apply_block(cfg, blk, unit_params[pos], x, positions=positions, context=context)
+            x, _, a = _apply_block(cfg, blk, unit_params[pos], x,
+                                   positions=positions, context=context)
             aux = aux + a
         return (x, aux), None
 
@@ -331,7 +334,8 @@ def _forward_cached(cfg, params, cache, tokens, *, context=None):
                 # Prefill: compute the context kv once and store it.
                 mp = _split(unit_params[pos], "mixer")
                 blk_cache = layers.context_kv(cfg, mp, context)
-            x, nc, _ = _apply_block(cfg, blk, unit_params[pos], x, positions=positions, cache=blk_cache)
+            x, nc, _ = _apply_block(cfg, blk, unit_params[pos], x,
+                                    positions=positions, cache=blk_cache)
             new_unit_cache.append(_store_cache(blk, nc))
         return x, tuple(new_unit_cache)
 

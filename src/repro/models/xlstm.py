@@ -107,7 +107,6 @@ def apply_mlstm(cfg, p, x, *, cache=None):
             new_cache = None
         else:
             # Final (C, n, m) state for subsequent decode steps.
-            s_len = x.shape[1]
             last_f = cum_f[:, -1:, :]                          # cumf_S
             st_lse = last_f - cum_f + i_pre                    # [B,S,H]
             m_state = jnp.max(st_lse, axis=1)                  # [B,H]
@@ -221,7 +220,6 @@ def apply_slstm(cfg, p, x, *, cache=None):
     from .layers import rmsnorm
 
     dt = x.dtype
-    d = cfg.d_model
     x_pre = (x @ p["w_in"].astype(dt)).astype(jnp.float32) + p["bias"]
 
     carry = cache if cache is not None else init_slstm_cache(cfg, x.shape[0])

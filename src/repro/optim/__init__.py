@@ -1,7 +1,8 @@
 """Optimisation: AdamW (+schedules, clipping) and gradient compression."""
 
-from .adamw import AdamWConfig, apply_updates, global_norm, init_opt_state, schedule_lr
 from . import compression
+from .adamw import (AdamWConfig, apply_updates, global_norm, init_opt_state,
+                    schedule_lr)
 
 __all__ = [
     "AdamWConfig",

@@ -17,8 +17,6 @@ dry-run strategies are FSDP×TP (DESIGN.md §5).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map

@@ -1,110 +1,19 @@
-"""Jaxpr introspection: intermediate-tensor accounting for memory guards.
+"""Back-compat shim: jaxpr introspection moved to ``repro.analysis``.
 
-The streaming fused path (DESIGN.md §8) exists to keep the full [B, T, N]
-state tensor out of HBM; these helpers make that property *checkable* by
-walking a traced jaxpr (recursively through scan/pjit/cond sub-jaxprs) and
-collecting the abstract values every equation produces.  Used by the
-tests/test_streaming.py jaxpr guard (no full-T state tensor, exactly one
-chunk scan) and by benchmarks/streaming_fusion.py (peak live state bytes,
-materialized vs streamed).
-
-Equations inside a ``pallas_call`` body are skipped: a kernel's jaxpr
-describes per-*block* VMEM compute, not HBM-resident arrays, and in
-interpret mode it contains emulation loops that are not real scans.
+ISSUE 7 promoted this module into the static-analysis subsystem
+(``repro.analysis.walker`` — hardened sub-jaxpr descent with equation
+provenance; ``repro.analysis.rules`` — the declarative contract API built
+on top).  Import from ``repro.analysis`` directly in new code.
 """
 
-from __future__ import annotations
+from repro.analysis.walker import (count_pallas_calls, count_scans,
+                                   intermediate_shapes,
+                                   max_intermediate_bytes,
+                                   state_tensor_bytes, trace_jaxpr,
+                                   walk_eqns)
 
-import jax
-
-try:  # jax >= 0.4.14
-    from jax.extend import core as jax_core
-except ImportError:  # pragma: no cover - older jax
-    from jax import core as jax_core
-
-
-def _sub_jaxprs(params):
-    """Yield every Jaxpr/ClosedJaxpr nested in an eqn's params."""
-    for value in params.values():
-        leaves = value if isinstance(value, (tuple, list)) else (value,)
-        for leaf in leaves:
-            if isinstance(leaf, jax_core.ClosedJaxpr):
-                yield leaf.jaxpr
-            elif isinstance(leaf, jax_core.Jaxpr):
-                yield leaf
-
-
-def walk_eqns(jaxpr, *, skip_pallas: bool = True):
-    """Depth-first iterator over all equations, entering sub-jaxprs."""
-    for eqn in jaxpr.eqns:
-        yield eqn
-        if skip_pallas and eqn.primitive.name == "pallas_call":
-            continue
-        for sub in _sub_jaxprs(eqn.params):
-            yield from walk_eqns(sub, skip_pallas=skip_pallas)
-
-
-def trace_jaxpr(fn, *args, **kwargs):
-    """ClosedJaxpr of ``fn(*args, **kwargs)`` (no execution)."""
-    return jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
-
-
-def intermediate_shapes(closed_jaxpr) -> list[tuple[tuple[int, ...], int]]:
-    """All (shape, nbytes) pairs produced by equations in the program.
-
-    Covers every intermediate array the traced computation names —
-    sub-jaxpr (scan body, pjit) outputs included, pallas kernel-internal
-    VMEM blocks excluded.
-    """
-    out = []
-    for eqn in walk_eqns(closed_jaxpr.jaxpr):
-        for var in eqn.outvars:
-            aval = var.aval
-            if hasattr(aval, "shape") and hasattr(aval, "dtype"):
-                nbytes = int(aval.size) * aval.dtype.itemsize
-                out.append((tuple(aval.shape), nbytes))
-    return out
-
-
-def max_intermediate_bytes(closed_jaxpr) -> int:
-    """Largest single intermediate array in the program, in bytes."""
-    return max((b for _, b in intermediate_shapes(closed_jaxpr)), default=0)
-
-
-def state_tensor_bytes(closed_jaxpr, t_len: int, min_elems: int) -> int:
-    """Largest "state-like" intermediate: carries the stream axis (a dim ==
-    ``t_len``) at state-tensor scale (>= ``min_elems`` elements).
-
-    The element floor is what separates a state tensor from the O(B·T)
-    input/target streams that legitimately carry the T axis: pass
-    ``B·t_len·N`` (full-stream check; 0 == the streaming property holds) or
-    ``B·chunk·N`` with ``t_len=chunk`` (the streamed path's peak live state
-    block — lane/feature padding of the kernel layouts is included in the
-    measured tensor, so compare against a padded budget).
-    """
-    best = 0
-    for shape, nbytes in intermediate_shapes(closed_jaxpr):
-        elems = 1
-        for d in shape:
-            elems *= d
-        if t_len in shape and elems >= min_elems:
-            best = max(best, nbytes)
-    return best
-
-
-def count_scans(closed_jaxpr) -> int:
-    """Number of ``lax.scan`` equations (pallas kernel bodies excluded)."""
-    return sum(1 for eqn in walk_eqns(closed_jaxpr.jaxpr)
-               if eqn.primitive.name == "scan")
-
-
-def count_pallas_calls(closed_jaxpr) -> int:
-    """Number of ``pallas_call`` equations anywhere in the program.
-
-    The WDM streaming guard uses this to pin the per-lane-mask claim
-    (DESIGN.md §9): all R wavelength channels run as ONE dfr_scan launch
-    plus ONE accumulate-into Gram launch per chunk-scan body — a program
-    that vmapped ``pallas_call`` per channel would show R× the count.
-    """
-    return sum(1 for eqn in walk_eqns(closed_jaxpr.jaxpr)
-               if eqn.primitive.name == "pallas_call")
+__all__ = [
+    "count_pallas_calls", "count_scans", "intermediate_shapes",
+    "max_intermediate_bytes", "state_tensor_bytes", "trace_jaxpr",
+    "walk_eqns",
+]

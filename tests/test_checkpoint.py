@@ -1,6 +1,5 @@
 """Checkpoint store: atomicity, integrity fallback, keep-k, async."""
 
-import json
 import pathlib
 
 import jax.numpy as jnp

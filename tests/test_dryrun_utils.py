@@ -1,6 +1,6 @@
 """Dry-run HLO collective parser on synthetic HLO snippets."""
 
-from repro.launch.dryrun import collective_bytes, _shape_bytes
+from repro.launch.dryrun import _shape_bytes, collective_bytes
 
 
 HLO = """

@@ -26,10 +26,16 @@ from repro.pipeline import (apply_readout, fit_ridge, fit_ridge_batched, gram,
                             solve_gcv, with_bias)
 
 MODELS = [SiliconMR(), SiliconMR(beta_tpa=0.5), MackeyGlass(), MZISine()]
+
+
+def _model_id(m):
+    return type(m).__name__ + str(getattr(m, "beta_tpa", ""))
+
+
 LAMS = (1e-6, 1e-4, 1e-2)
 
 
-@pytest.mark.parametrize("model", MODELS, ids=lambda m: type(m).__name__ + str(getattr(m, "beta_tpa", "")))
+@pytest.mark.parametrize("model", MODELS, ids=_model_id)
 @pytest.mark.parametrize("batched", [False, True], ids=["series", "batch"])
 def test_generate_states_kernel_matches_ref(model, batched):
     """The public "kernel" dispatch equals the sequential oracle dispatch."""

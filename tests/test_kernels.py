@@ -17,7 +17,11 @@ from repro.kernels.ridge_gram import (effective_block_t, gram_accumulate,
 MODELS = [SiliconMR(), SiliconMR(beta_tpa=0.7), MackeyGlass(), MZISine()]
 
 
-@pytest.mark.parametrize("model", MODELS, ids=lambda m: type(m).__name__ + str(getattr(m, "beta_tpa", "")))
+def _model_id(m):
+    return type(m).__name__ + str(getattr(m, "beta_tpa", ""))
+
+
+@pytest.mark.parametrize("model", MODELS, ids=_model_id)
 @pytest.mark.parametrize("b,k,n", [(1, 5, 7), (3, 11, 17), (5, 7, 64), (2, 3, 129)])
 def test_dfr_scan_matches_oracle(model, b, k, n):
     rng = np.random.default_rng(b * 100 + k * 10 + n)
@@ -239,7 +243,7 @@ def test_dfr_scan_bf16_multi_tile_auto_matches_f32():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("model", MODELS, ids=lambda m: type(m).__name__ + str(getattr(m, "beta_tpa", "")))
+@pytest.mark.parametrize("model", MODELS, ids=_model_id)
 @pytest.mark.parametrize("block_s", [1, 8])
 def test_dfr_scan_chunked_resume_bit_exact(model, block_s):
     """K split into chunks with the carried final state must BIT-match one

@@ -15,9 +15,8 @@ from repro.core import (
     MackeyGlass,
     SiliconMR,
     SiliconMRLiteral,
-    nrmse,
-    tasks,
     power,
+    tasks,
     timing,
 )
 
@@ -38,11 +37,13 @@ def _fit_eval(cfg, ds):
 @pytest.fixture(scope="module")
 def narma_errors(narma):
     return {
-        "mr": _fit_eval(DFRCConfig(model=SiliconMR(), n_nodes=200, washout=60, ridge_l2=LAMS), narma),
+        "mr": _fit_eval(DFRCConfig(model=SiliconMR(), n_nodes=200, washout=60,
+                                   ridge_l2=LAMS), narma),
         "mg": _fit_eval(
             DFRCConfig(model=MackeyGlass(), n_nodes=200, washout=60, ridge_l2=LAMS,
                        mask_levels=(-1.0, 1.0)), narma),
-        "mzi": _fit_eval(DFRCConfig(model=MZISine(), n_nodes=200, washout=60, ridge_l2=LAMS), narma),
+        "mzi": _fit_eval(DFRCConfig(model=MZISine(), n_nodes=200, washout=60,
+                                    ridge_l2=LAMS), narma),
     }
 
 
@@ -105,7 +106,8 @@ def test_power_model_matches_table1():
     and the MZI accelerator draws several times more power."""
     mr = power.SILICON_MR.total_mw()
     mzi = power.ALL_OPTICAL_MZI.total_mw()
-    assert abs(mr - power.PAPER_TOTALS_MW["Silicon MR"]) / power.PAPER_TOTALS_MW["Silicon MR"] < 0.10, mr
+    rel = abs(mr - power.PAPER_TOTALS_MW["Silicon MR"]) / power.PAPER_TOTALS_MW["Silicon MR"]
+    assert rel < 0.10, mr
     assert mzi > 2.5 * mr, (mr, mzi)
 
 

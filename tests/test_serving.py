@@ -20,11 +20,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import (MaxPallasCalls, NoStateTensor, Program,
+                            check_rules, count_pallas_calls,
+                            state_tensor_bytes)
 from repro.core import SiliconMR
 from repro.core.masking import make_mask
 from repro.core.reservoir import generate_states
-from repro.pipeline.introspect import (count_pallas_calls, state_tensor_bytes,
-                                       trace_jaxpr)
 from repro.pipeline.ridge import _fold_chunk, _plan_fold, fit_ridge_streaming
 from repro.pipeline.session import (SessionConfig, _session_step, session_init,
                                     session_predict, session_reset,
@@ -282,12 +283,18 @@ def test_session_step_jaxpr_holds_no_full_stream_tensor(refresh):
     state = session_init(cfg, b)
     z = jnp.zeros((b, 32), jnp.float32)
     fn = jax.jit(_session_step, static_argnames=("cfg", "refresh"))
-    cj = trace_jaxpr(lambda st, jc, yc: fn(cfg, MASK, st, jc, yc,
-                                           refresh=refresh), state, z, z)
-    assert state_tensor_bytes(cj, stream_len, b * stream_len * N) == 0
-    # largest state-like block is the chunk itself (feature-padded budget)
-    peak = state_tensor_bytes(cj, 32, b * 32 * N)
-    assert peak <= 2 * b * 32 * 128 * 4, peak
+    prog = Program(lambda st, jc, yc: fn(cfg, MASK, st, jc, yc,
+                                         refresh=refresh), (state, z, z))
+    viols = check_rules(prog, [
+        NoStateTensor(stream_len, b * stream_len * N,
+                      what="full-stream tensor"),
+        # largest state-like block is the chunk itself (feature-padded
+        # budget)
+        NoStateTensor(32, b * 32 * N, max_bytes=2 * b * 32 * 128 * 4,
+                      what="chunk block"),
+    ])
+    assert not viols, [str(v) for v in viols]
+    assert state_tensor_bytes(prog.closed_jaxpr, 32, b * 32 * N) > 0
 
 
 def test_session_step_kernel_path_single_pallas_launch_pair():
@@ -298,9 +305,11 @@ def test_session_step_kernel_path_single_pallas_launch_pair():
     state = session_init(cfg, b)
     z = jnp.zeros((b, 24), jnp.float32)
     fn = jax.jit(_session_step, static_argnames=("cfg", "refresh"))
-    cj = trace_jaxpr(lambda st, jc, yc: fn(cfg, MASK, st, jc, yc,
-                                           refresh=False), state, z, z)
-    assert count_pallas_calls(cj) == 2
+    prog = Program(lambda st, jc, yc: fn(cfg, MASK, st, jc, yc,
+                                         refresh=False), (state, z, z))
+    viols = check_rules(prog, [MaxPallasCalls(2)])
+    assert not viols, [str(v) for v in viols]
+    assert count_pallas_calls(prog.closed_jaxpr) == 2
 
 
 # ---------------------------------------------------------------------------

@@ -3,7 +3,6 @@ arch gets a valid PartitionSpec (divisible, no axis reuse), and the cache
 specs shard what must be sharded."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
@@ -55,7 +54,6 @@ def test_param_specs_valid(arch, mesh):
 
 def test_fsdp_fallback_shards_big_dims():
     """starcoder2 (24 heads) must still shard its big matrices over 'model'."""
-    cfg = get_config("starcoder2-3b")
     spec = spec_for(("embed", "heads", "hd"), (3072, 24, 128), POD, "fsdp")
     # heads (24) can't take model=16; embed dim picks up ("data","model")
     assert spec[0] in (("data", "model"), "data")

@@ -14,13 +14,13 @@ import numpy as np
 import pytest
 
 from conftest import stack_datasets as _stack
+from repro.analysis import (MaxScans, NoStateTensor, Program, check_rules,
+                            state_tensor_bytes, trace_jaxpr)
 from repro.core import SiliconMR, make_mask, tasks
 from repro.core.reservoir import generate_states
 from repro.kernels.dfr_scan import padded_lanes
 from repro.pipeline import (Experiment, ExperimentConfig, channel_states,
                             fit_ridge_batched, fit_ridge_streaming)
-from repro.pipeline.introspect import (count_scans, state_tensor_bytes,
-                                       trace_jaxpr)
 
 LAMS = (1e-8, 1e-6, 1e-4)
 
@@ -176,17 +176,22 @@ def test_streaming_fit_jaxpr_has_no_full_t_state_tensor():
     j = jnp.zeros((b, k), jnp.float32)
     y = jnp.zeros((b, k), jnp.float32)
 
-    cj = trace_jaxpr(
+    prog = Program(
         lambda jj, yy: fit_ridge_streaming(model, mask, jj, yy, washout=w0,
                                            chunk_k=chunk, lambdas=(1e-6,),
                                            state_method="kernel",
-                                           use_kernel=True), j, y)
-    assert count_scans(cj) == 1
-    assert state_tensor_bytes(cj, k, b * k * n) == 0
+                                           use_kernel=True), (j, y))
     # peak chunk block vs the lane/feature-padded chunk budget
     fp = -(-(n + 1) // 128) * 128
     chunk_budget = padded_lanes(b) * chunk * fp * 4
-    peak_chunk = state_tensor_bytes(cj, chunk, b * chunk * n)
+    viols = check_rules(prog, [
+        MaxScans(1),
+        NoStateTensor(k, b * k * n, what="full-stream tensor"),
+        NoStateTensor(chunk, b * chunk * n, max_bytes=2 * chunk_budget,
+                      what="chunk block"),
+    ])
+    assert not viols, [str(v) for v in viols]
+    peak_chunk = state_tensor_bytes(prog.closed_jaxpr, chunk, b * chunk * n)
     assert 0 < peak_chunk <= 2 * chunk_budget, (peak_chunk, chunk_budget)
 
     # sanity: the materialized fit DOES carry the full-T state tensor
@@ -207,13 +212,15 @@ def test_streaming_run_pipeline_jaxpr(narma_batch):
     from repro.pipeline.experiment import _run_pipeline
 
     mask = Experiment(cfg).mask
-    cj = trace_jaxpr(
+    prog = Program(
         lambda a, b_, c, d: _run_pipeline(cfg, mask, a, b_, c, d),
-        jnp.asarray(tr_in, jnp.float32), jnp.asarray(tr_tg, jnp.float32),
-        jnp.asarray(te_in, jnp.float32), jnp.asarray(te_tg, jnp.float32))
+        (jnp.asarray(tr_in, jnp.float32), jnp.asarray(tr_tg, jnp.float32),
+         jnp.asarray(te_in, jnp.float32), jnp.asarray(te_tg, jnp.float32)))
     b = tr_in.shape[0]
-    for t_len in (tr_in.shape[1], te_in.shape[1]):
-        assert state_tensor_bytes(cj, t_len, b * t_len * cfg.n_nodes) == 0, t_len
+    viols = check_rules(prog, [
+        NoStateTensor(t_len, b * t_len * cfg.n_nodes)
+        for t_len in (tr_in.shape[1], te_in.shape[1])])
+    assert not viols, [str(v) for v in viols]
 
 
 # ---------------------------------------------------------------------------

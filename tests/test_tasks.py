@@ -1,7 +1,6 @@
 """Dataset generators: determinism, alignment, SNR correctness."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import tasks

@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data.pipeline import DataConfig, host_batch
 from repro.models import ModelConfig

@@ -8,19 +8,17 @@ chunk scan, bf16 state chunks within documented parity bounds, and the
 memory property (no [R, K, N] tensor) checkable from the jaxpr.
 """
 
-import dataclasses
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from conftest import stack_datasets as _stack
+from repro.analysis import (MaxPallasCalls, MaxScans, NoStateTensor, Program,
+                            check_rules, state_tensor_bytes, trace_jaxpr)
 from repro.core import SiliconMR, make_mask, tasks
 from repro.kernels.dfr_scan import padded_lanes
 from repro.pipeline import (ExperimentConfig, WDMExperiment, channel_states,
                             fit_ridge_batched, fit_ridge_streaming_wdm)
-from repro.pipeline.introspect import (count_pallas_calls, count_scans,
-                                       state_tensor_bytes, trace_jaxpr)
 
 LAMS = (1e-8, 1e-6, 1e-4)
 # bf16 state chunks round every state entry to 8 mantissa bits; measured
@@ -233,18 +231,23 @@ def test_wdm_streaming_fit_jaxpr_no_full_k_tensor():
     j = jnp.zeros((r, k), jnp.float32)
     y = jnp.zeros((r, k), jnp.float32)
 
-    cj = trace_jaxpr(
+    prog = Program(
         lambda jj, yy: fit_ridge_streaming_wdm(model, masks, jj, yy,
                                                washout=w0, chunk_k=chunk,
                                                lambdas=(1e-6,),
                                                state_method="kernel",
-                                               use_kernel=True), j, y)
-    assert count_scans(cj) == 1
-    assert count_pallas_calls(cj) == 2      # dfr_scan + gram, once each
-    assert state_tensor_bytes(cj, k, r * k * n) == 0
+                                               use_kernel=True), (j, y))
     fp = -(-(n + 1) // 128) * 128
     chunk_budget = padded_lanes(r) * chunk * fp * 4
-    peak_chunk = state_tensor_bytes(cj, chunk, r * chunk * n)
+    viols = check_rules(prog, [
+        MaxScans(1),
+        MaxPallasCalls(2),                  # dfr_scan + gram, once each
+        NoStateTensor(k, r * k * n, what="full-stream tensor"),
+        NoStateTensor(chunk, r * chunk * n, max_bytes=2 * chunk_budget,
+                      what="chunk block"),
+    ])
+    assert not viols, [str(v) for v in viols]
+    peak_chunk = state_tensor_bytes(prog.closed_jaxpr, chunk, r * chunk * n)
     assert 0 < peak_chunk <= 2 * chunk_budget, (peak_chunk, chunk_budget)
 
 
@@ -280,11 +283,13 @@ def test_wdm_run_pipeline_jaxpr(narma_channels):
     from repro.pipeline.experiment import _run_pipeline
 
     exp = WDMExperiment(cfg, 4)
-    cj = trace_jaxpr(
+    prog = Program(
         lambda a, b_, c, d: _run_pipeline(cfg, exp.masks, a, b_, c, d,
                                           wdm=True),
-        jnp.asarray(tr_in, jnp.float32), jnp.asarray(tr_tg, jnp.float32),
-        jnp.asarray(te_in, jnp.float32), jnp.asarray(te_tg, jnp.float32))
+        (jnp.asarray(tr_in, jnp.float32), jnp.asarray(tr_tg, jnp.float32),
+         jnp.asarray(te_in, jnp.float32), jnp.asarray(te_tg, jnp.float32)))
     r = tr_in.shape[0]
-    for t_len in (tr_in.shape[1], te_in.shape[1]):
-        assert state_tensor_bytes(cj, t_len, r * t_len * cfg.n_nodes) == 0, t_len
+    viols = check_rules(prog, [
+        NoStateTensor(t_len, r * t_len * cfg.n_nodes)
+        for t_len in (tr_in.shape[1], te_in.shape[1])])
+    assert not viols, [str(v) for v in viols]
