@@ -1,0 +1,237 @@
+"""Chaos soak benchmark: isolation, re-convergence, crash recovery gates.
+
+The ISSUE 8 acceptance harness, runnable as a CI smoke gate.  Three cells,
+each a *bitwise* or *learnability* claim about the robust serving stack
+(``repro.robustness`` + the DESIGN.md §12 in-graph guards + the
+crash-recoverable ``DFRServer``):
+
+* **soak** — a slab where a subset of slots is attacked (NaN drive ticks,
+  a windowed carry-corruption burst, a stuck-at node) while the rest serve
+  clean traffic.  Gates: healthy slots' predictions and final state are
+  BITWISE identical to a fault-free run of the same compiled program;
+  poisoned slots are quarantined in-graph (poison counts match the fault
+  windows) and no non-finite value ever reaches the host; the quarantined
+  slot *re-converges* on post-fault data (tail SER < 0.5, i.e. real signal
+  on 4-level symbols, and within a band of the clean reference).
+* **kill_restore** — a checkpointing server killed mid-stream (faults
+  armed) and restored into a fresh process image: every completed stream's
+  predictions must be bitwise identical to an uninterrupted reference run.
+* **contracts** — the registered program contracts of the fault-injected
+  step variants (``repro.analysis``: no host callback, no full-stream
+  tensor, one Pallas launch pair, donation honored) re-evaluated and
+  serialized with the artifact.
+
+Emits ``BENCH_chaos_soak.json``; ``--smoke`` shrinks shapes but keeps every
+gate armed (bitwise claims are size-independent).
+
+  PYTHONPATH=src python -m benchmarks.chaos_soak [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+
+import numpy as np
+
+from repro.analysis import check_rules
+from repro.analysis.registry import ENTRY_POINTS
+from repro.pipeline.session import SessionConfig
+from repro.robustness import no_faults, on_rows, run_soak
+
+from .common import csv_row
+
+RECONVERGE_SER = 0.5          # tail SER a re-converged slot must beat
+RECONVERGE_BAND = 0.15        # ... and its gap to the clean reference
+
+
+def _cfg(n: int, chunk: int) -> SessionConfig:
+    return SessionConfig(n_nodes=n, washout=chunk, chunk_k=chunk,
+                         refresh_every=2, ridge_l2=(1e-6, 1e-4),
+                         state_method="fast")
+
+
+def soak_cell(*, batch: int, n_ticks: int, n: int, chunk: int,
+              seed: int = 0) -> dict:
+    """Mixed-fault soak: NaN ticks, a corrupt burst, a stuck node."""
+    cfg = _cfg(n, chunk)
+    burst = max(2, n_ticks // 6)
+    spec = on_rows(no_faults(batch), [1], nan_prob=1.0, until_tick=burst)
+    spec = on_rows(spec, [2], corrupt_prob=1.0, until_tick=burst)
+    spec = on_rows(spec, [3], stuck_node=min(3, n - 1), stuck_value=0.5)
+    rep = run_soak(cfg, spec, n_ticks=n_ticks, seed=seed, data_seed=seed)
+    rep.update({"n_nodes": n, "fault_burst_ticks": burst,
+                "poisoned_rows": [1, 2], "stuck_rows": [3]})
+    return rep
+
+
+def kill_restore_cell(*, batch: int, n_streams: int, n_ticks_per_stream: int,
+                      n: int, chunk: int, kill_after: int,
+                      checkpoint_every: int, seed: int = 0) -> dict:
+    """Server killed mid-stream and restored; outputs vs an unbroken run."""
+    from repro.launch.serve_dfr import DFRServer, StreamRequest
+
+    cfg = _cfg(n, chunk)
+    spec = on_rows(no_faults(batch), [0], nan_prob=0.05,
+                   until_tick=kill_after)
+    length = n_ticks_per_stream * chunk
+
+    def requests():
+        rng = np.random.default_rng(seed + 1)
+        return [StreamRequest(rid=r, j=rng.random(length).astype(np.float32),
+                              y=rng.random(length).astype(np.float32))
+                for r in range(n_streams)]
+
+    def outputs(server):
+        return {r.rid: np.concatenate(r.y_hat) for r in server.completed}
+
+    ref = DFRServer(cfg, batch, fault_spec=spec, fault_seed=seed)
+    ref.warmup()
+    for r in requests():
+        ref.submit(r)
+    ref.drain()
+    expect = outputs(ref)
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        crash = DFRServer(cfg, batch, fault_spec=spec, fault_seed=seed,
+                          checkpoint_dir=ckpt,
+                          checkpoint_every=checkpoint_every)
+        crash.warmup()
+        for r in requests():
+            crash.submit(r)
+        for _ in range(kill_after):
+            crash.step()
+        crash.close()
+
+        resumed = DFRServer(cfg, batch, fault_spec=spec, fault_seed=seed,
+                            checkpoint_dir=ckpt)
+        resumed.warmup()
+        restored_tick = resumed.restore()
+        resumed.drain()
+        got = outputs(resumed)
+        stats = resumed.stats()
+
+    bit_exact = (set(got) == set(expect) and all(
+        np.array_equal(expect[rid], got[rid]) for rid in expect))
+    return {
+        "n_streams": n_streams, "batch": batch, "chunk": chunk,
+        "stream_len": length, "killed_at_tick": kill_after,
+        "checkpoint_every": checkpoint_every,
+        "restored_from_tick": restored_tick,
+        "resume_bit_exact": bool(bit_exact),
+        "completed": len(got),
+        "server_stats": stats,
+    }
+
+
+def contract_cell() -> dict:
+    """Re-evaluate the registered fault-step contracts for the artifact."""
+    out = {}
+    for name in ("session_step_faulted", "session_step_faulted_kernel"):
+        prog, rules = ENTRY_POINTS[name].build()
+        out[name] = {
+            "rules": [r.describe() for r in rules],
+            "contract_violations": [str(v) for v in check_rules(prog, rules)],
+        }
+    return out
+
+
+def check(report: dict) -> list[str]:
+    """The ISSUE 8 acceptance gates."""
+    failures = []
+    s = report["soak"]
+    if not s["healthy_bitwise_identical"]:
+        failures.append("healthy slots are NOT bitwise identical to the "
+                        "fault-free run")
+    if not s["output_all_finite"]:
+        failures.append("a non-finite prediction reached the host")
+    for row in s["poisoned_rows"]:
+        if s["quarantine_events"][row] < 1:
+            failures.append(f"poisoned slot {row} was never quarantined")
+        ser = s["tail_ser_rows"][row]
+        if ser >= RECONVERGE_SER:
+            failures.append(f"slot {row} did not re-converge after "
+                            f"quarantine: tail SER {ser:.3f}")
+        if ser > s["tail_ser_clean"] + RECONVERGE_BAND:
+            failures.append(f"slot {row} re-converged badly: tail SER "
+                            f"{ser:.3f} vs clean {s['tail_ser_clean']:.3f}")
+    for row in s["stuck_rows"]:
+        if s["quarantine_events"][row] != 0:
+            failures.append(f"degradation fault on slot {row} tripped the "
+                            "quarantine (drift must not count as poison)")
+    kr = report["kill_restore"]
+    if not kr["resume_bit_exact"]:
+        failures.append("kill-and-restore resume is NOT bit-exact")
+    if kr["restored_from_tick"] is None:
+        failures.append("no restorable checkpoint was written")
+    for name, c in report["contracts"].items():
+        for v in c["contract_violations"]:
+            failures.append(f"fault-step contract at {name}: {v}")
+    return failures
+
+
+def build_report(*, smoke: bool) -> dict:
+    import jax
+    if smoke:
+        soak = soak_cell(batch=6, n_ticks=24, n=24, chunk=32)
+        kr = kill_restore_cell(batch=4, n_streams=6, n_ticks_per_stream=5,
+                               n=24, chunk=32, kill_after=5,
+                               checkpoint_every=2)
+    else:
+        soak = soak_cell(batch=16, n_ticks=64, n=64, chunk=32)
+        kr = kill_restore_cell(batch=8, n_streams=24, n_ticks_per_stream=8,
+                               n=64, chunk=32, kill_after=12,
+                               checkpoint_every=4)
+    return {
+        "config": {"backend": jax.default_backend(), "smoke": smoke,
+                   "reconverge_ser_gate": RECONVERGE_SER,
+                   "reconverge_band": RECONVERGE_BAND},
+        "soak": soak,
+        "kill_restore": kr,
+        "contracts": contract_cell(),
+    }
+
+
+def run() -> list[str]:
+    """benchmarks.run section: CSV rows + the JSON artifact."""
+    report = build_report(smoke=False)
+    with open("BENCH_chaos_soak.json", "w") as fh:
+        json.dump(report, fh, indent=2)
+    failures = check(report)
+    if failures:
+        raise AssertionError("chaos_soak check FAILED: " + "; ".join(failures))
+    s, kr = report["soak"], report["kill_restore"]
+    return [
+        csv_row("chaos_soak/healthy_bitwise_identical",
+                int(s["healthy_bitwise_identical"]),
+                f"batch={s['batch']};faulty={s['faulty_rows']}"),
+        csv_row("chaos_soak/quarantine_events",
+                sum(s["quarantine_events"]),
+                f"burst={s['fault_burst_ticks']}ticks"),
+        csv_row("chaos_soak/tail_ser_reconverged",
+                f"{max(s['tail_ser_rows'][r] for r in s['poisoned_rows']):.4f}",
+                f"clean={s['tail_ser_clean']:.4f}"),
+        csv_row("chaos_soak/resume_bit_exact", int(kr["resume_bit_exact"]),
+                f"restored_from={kr['restored_from_tick']};"
+                f"killed_at={kr['killed_at_tick']}"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes, every gate armed (CI tier-1 step)")
+    ap.add_argument("--out", default="BENCH_chaos_soak.json")
+    args = ap.parse_args()
+    report = build_report(smoke=args.smoke)
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(json.dumps(report, indent=2))
+    failures = check(report)
+    if failures:
+        raise SystemExit("chaos_soak check FAILED: " + "; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

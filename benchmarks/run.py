@@ -16,12 +16,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list of fig5,fig6,fig7,table1,kernels,"
                          "kernel_batching,streaming_fusion,wdm_streaming,"
-                         "dfr_serving,roofline")
+                         "dfr_serving,chaos_soak,roofline")
     args = ap.parse_args()
 
-    from . import (dfr_serving, fig5_nrmse, fig6_ser, fig7_training_time,
-                   kernel_batching, kernel_bench, roofline, streaming_fusion,
-                   table1_power, wdm_streaming)
+    from . import (chaos_soak, dfr_serving, fig5_nrmse, fig6_ser,
+                   fig7_training_time, kernel_batching, kernel_bench,
+                   roofline, streaming_fusion, table1_power, wdm_streaming)
 
     sections = {
         "fig5": fig5_nrmse.run,
@@ -33,6 +33,7 @@ def main() -> None:
         "streaming_fusion": streaming_fusion.run,
         "wdm_streaming": wdm_streaming.run,
         "dfr_serving": dfr_serving.run,
+        "chaos_soak": chaos_soak.run,
         "roofline": roofline.run,
     }
     chosen = args.only.split(",") if args.only else list(sections)

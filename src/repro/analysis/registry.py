@@ -214,9 +214,47 @@ def _session_step_kernel():
 def _serve_dfr_step():
     prog = _session_program("serve_dfr_step", refresh=True, donate=True,
                             forgetting=0.99)
-    # All 8 SessionState leaves must come back donated in the lowered
-    # program — a silently dropped donation doubles the serving slab.
+    # All 10 SessionState leaves (incl. the quarantined/poison health
+    # bookkeeping) must come back donated in the lowered program — a
+    # silently dropped donation doubles the serving slab.
     return prog, _SESSION_RULES + (DonationHonored(),)
+
+
+def _faulted_program(name, *, refresh, donate=False, **cfg_kw):
+    from repro.core import make_mask
+    from repro.pipeline.session import SessionConfig, session_init
+    from repro.robustness.faults import faulty_session_step, no_faults
+    cfg = SessionConfig(n_nodes=_N, chunk_k=_CHUNK, **cfg_kw)
+    mask = make_mask(cfg.n_nodes, seed=0)
+    state = session_init(cfg, _B)
+    spec = no_faults(_B)
+    z = jnp.zeros((_B, _CHUNK), jnp.float32)
+    tick = jnp.int32(0)
+    fn = lambda sp, st, jc, yc, t: faulty_session_step(
+        cfg, mask, sp, st, jc, yc, t, refresh=refresh)
+    return Program(fn, (spec, state, z, z, tick), name=name,
+                   donate_argnums=(1,) if donate else ())
+
+
+@register("session_step_faulted",
+          "Fault-injected session tick: injections + quarantine in-graph")
+def _session_step_faulted():
+    # Same contract set as the clean tick: fault models are traced operand
+    # transforms (repro.robustness), never host callbacks or new tensors.
+    # The uint32 PRNG key is integer data — NoDtypeAbove only constrains
+    # inexact dtypes.
+    return (_faulted_program("session_step_faulted", refresh=True),
+            _SESSION_RULES)
+
+
+@register("session_step_faulted_kernel",
+          "Fault-injected session tick, Pallas path (still one launch pair)")
+def _session_step_faulted_kernel():
+    prog = _faulted_program("session_step_faulted_kernel", refresh=False,
+                            donate=True, state_method="kernel",
+                            use_kernel=True)
+    return prog, _SESSION_RULES + (MaxPallasCalls(2), VmemBudget(),
+                                   DonationHonored(min_pallas_aliases=2))
 
 
 @register("reservoir_lm_train_step",

@@ -221,7 +221,13 @@ class NoDtypeAbove(Rule):
     def check(self, program: Program) -> list:
         out = []
         for rec in program.records:
-            dt = jnp.dtype(rec.dtype)
+            try:
+                dt = jnp.dtype(rec.dtype)
+            except TypeError:
+                # extended dtypes (e.g. the PRNG ``key<fry>`` of a traced
+                # fault-injection seed) are opaque integer data, never a
+                # float-width promotion — out of scope for this rule
+                continue
             if (jnp.issubdtype(dt, jnp.inexact)
                     and dt.itemsize > self.limit.itemsize):
                 out.append(_rec_violation(

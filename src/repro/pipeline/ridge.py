@@ -203,6 +203,25 @@ def fit_ridge_batched(
     return jax.vmap(functools.partial(fit_ridge, lambdas=lams))(states, y)
 
 
+def guard_readout(w_new: jnp.ndarray, idx_new: jnp.ndarray,
+                  w_last: jnp.ndarray, idx_last: jnp.ndarray):
+    """Last-good-readout fallback for batched GCV solves (DESIGN.md §12).
+
+    ``w_new`` [B, F, C] / ``idx_new`` [B] is a freshly solved readout batch;
+    rows where the solve produced any non-finite weight keep
+    (``w_last``, ``idx_last``) instead — an eigh that failed to converge or
+    a fold that slipped an Inf past the upstream guards must degrade ONE
+    row to its previous readout, never emit NaN predictions or poison the
+    slab.  Pure ``jnp.where`` row selects: for finite rows the fallback is
+    bitwise invisible, so guarded solves stay bit-identical to unguarded
+    ones on healthy data (tests/test_robustness.py pins both properties).
+    """
+    ok = jnp.all(jnp.isfinite(w_new.reshape(w_new.shape[0], -1)), axis=1)
+    w = jnp.where(ok[:, None, None], w_new, w_last)
+    idx = jnp.where(ok, idx_new.astype(idx_last.dtype), idx_last)
+    return w, idx
+
+
 def apply_readout(states: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """y = [states, 1] @ w; squeezes a single output channel."""
     y = with_bias(states) @ w

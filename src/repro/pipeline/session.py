@@ -30,11 +30,26 @@ an online-update engine:
   ``session_step`` is static, so a server re-solves every ``refresh_every``
   ticks and pays the eigh 1/refresh_every as often, with exactly two
   compiled step variants (fold-only, fold+solve).
+* **In-graph health masking** (``SessionConfig.guard``, DESIGN.md §12) —
+  one non-finite tick would otherwise poison a slot *permanently*: NaN in
+  the reservoir carry propagates to every later chunk, NaN in the Gram
+  survives every later fold (λ·NaN + X = NaN).  The serving tick therefore
+  ends with a per-row finite check over everything the row carries forward
+  (carry, Gram/moments, readout, prediction); rows that fail are reset
+  in-graph (the quarantine), flagged in ``SessionState.quarantined`` and
+  counted in ``SessionState.poison`` — all traced ops, no host round-trip,
+  still exactly two compiled step variants.  The GCV solve additionally
+  falls back to the row's last-good readout when the fresh solve comes
+  back non-finite (``pipeline/ridge.guard_readout``).  For healthy rows
+  every guard is a ``select`` of the identical value, so the guarded step
+  stays *bitwise* equal to the unguarded one on clean data.
 
-The serving loop built on top lives in ``launch/serve_dfr.py``; the
+The serving loop built on top lives in ``launch/serve_dfr.py``; the fault
+models the guards are validated against live in ``repro.robustness``.  The
 invariants (λ = 1.0 bitwise parity with the one-shot streaming fit,
-chunk-split independence) are pinned by tests/test_serving.py and the
-hypothesis property suite (tests/test_properties.py).
+chunk-split independence, quarantine isolation) are pinned by
+tests/test_serving.py, tests/test_robustness.py and the hypothesis property
+suite (tests/test_properties.py).
 """
 
 from __future__ import annotations
@@ -49,7 +64,7 @@ import jax.numpy as jnp
 from repro.core.nonlinear import NLModel, SiliconMR
 from repro.core.reservoir import generate_states
 
-from .ridge import _fold_chunk, _plan_fold, solve_gcv, with_bias
+from .ridge import _fold_chunk, _plan_fold, guard_readout, solve_gcv, with_bias
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +94,7 @@ class SessionConfig:
     block_t: int = 512
     block_f: int = 128
     state_dtype: str | None = None  # sub-f32 emitted state chunks (DESIGN.md §9)
+    guard: bool = True             # in-graph health masking (DESIGN.md §12)
 
     def __post_init__(self):
         if not isinstance(self.ridge_l2, tuple):
@@ -111,7 +127,10 @@ class SessionState(NamedTuple):
     Gram block is carried feature-padded ([B, Fq, Fq], Fq = F rounded to the
     kernel's block_f tile) for the same reason ``fit_ridge_streaming``
     carries it padded — the accumulate-into kernel then never pads or
-    slices G per chunk (DESIGN.md §8/§10).
+    slices G per chunk (DESIGN.md §8/§10).  The health leaves
+    (``quarantined``/``poison``, DESIGN.md §12) are [B] bookkeeping only —
+    no per-period axis ever enters the state, so the serving memory
+    contracts are unchanged by the guards.
     """
 
     s: jnp.ndarray         # [B, N]  f32 — reservoir carry (resume point)
@@ -122,6 +141,8 @@ class SessionState(NamedTuple):
     w: jnp.ndarray         # [B, F, C] f32 — current readout (zeros until solved)
     lam_idx: jnp.ndarray   # [B] i32 — GCV-selected λ index of that readout
     step: jnp.ndarray      # [B] i32 — periods consumed (washout phase tracker)
+    quarantined: jnp.ndarray  # [B] bool — row reset by the health guard THIS tick
+    poison: jnp.ndarray    # [B] i32 — quarantine events since the slot was reset
 
     @property
     def batch(self) -> int:
@@ -141,6 +162,8 @@ def session_init(cfg: SessionConfig, batch: int) -> SessionState:
         w=jnp.zeros((batch, f, c), jnp.float32),
         lam_idx=jnp.zeros((batch,), jnp.int32),
         step=jnp.zeros((batch,), jnp.int32),
+        quarantined=jnp.zeros((batch,), bool),
+        poison=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -158,6 +181,62 @@ def session_reset(state: SessionState, rows: jnp.ndarray) -> SessionState:
         return jnp.where(mask, jnp.zeros_like(leaf), leaf)
 
     return SessionState(*(zero_rows(leaf) for leaf in state))
+
+
+def _rows_finite(*arrays) -> jnp.ndarray:
+    """[B] bool — True where every entry of every array's row is finite."""
+    ok = None
+    for a in arrays:
+        fin = jnp.all(jnp.isfinite(a.reshape(a.shape[0], -1)), axis=1)
+        ok = fin if ok is None else ok & fin
+    return ok
+
+
+def session_health(state: SessionState,
+                   y_hat: jnp.ndarray | None = None) -> jnp.ndarray:
+    """[B] bool — per-row finite check of everything a row carries forward.
+
+    A row is healthy iff its reservoir carry, Gram/moment statistics, and
+    readout are all finite (plus this tick's prediction when given).  One
+    NaN/Inf anywhere marks the row: NaN in the carry re-poisons every later
+    chunk, NaN in G survives every later fold, NaN in w corrupts every
+    later prediction — so the check is over the *persisted* leaves, which
+    is both necessary and sufficient to catch a poisoned slot at the tick
+    it happens.
+    """
+    arrays = [state.s, state.g, state.c, state.y2, state.w]
+    if y_hat is not None:
+        arrays.append(y_hat)
+    return _rows_finite(*arrays)
+
+
+def _quarantine(state: SessionState, y_hat: jnp.ndarray):
+    """In-graph slot quarantine (DESIGN.md §12).
+
+    Rows whose post-fold state or prediction went non-finite are reset to
+    the dark-reservoir/empty-statistics state *inside the compiled step*
+    (``jnp.where`` per leaf — the same mechanism as ``session_reset``), so
+    one poisoned stream never contaminates its slab neighbours or any later
+    tick of its own slot.  The reset restarts the row's period counter, so
+    washout re-applies and the slot re-converges from clean data.  The
+    row's prediction is zeroed (never emit NaN to the host); the event is
+    flagged in ``quarantined`` and counted in ``poison``.  Healthy rows
+    pass through as selects of the identical value — bitwise a no-op.
+    """
+    bad = ~session_health(state, y_hat)
+
+    def scrub(leaf):
+        m = bad.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.where(m, jnp.zeros_like(leaf), leaf)
+
+    state = SessionState(
+        s=scrub(state.s), g=scrub(state.g), c=scrub(state.c),
+        y2=scrub(state.y2), tcnt=scrub(state.tcnt), w=scrub(state.w),
+        lam_idx=scrub(state.lam_idx), step=scrub(state.step),
+        quarantined=bad,
+        poison=state.poison + bad.astype(jnp.int32))
+    y_hat = jnp.where(bad[:, None, None], jnp.zeros_like(y_hat), y_hat)
+    return y_hat, state
 
 
 def _valid_mask(cfg: SessionConfig, step: jnp.ndarray,
@@ -204,14 +283,23 @@ def _fold(cfg: SessionConfig, state: SessionState, states, y3, vfit,
 
 
 def _solve(cfg: SessionConfig, state: SessionState) -> SessionState:
-    """Re-solve the readout from the current statistics (the eigh+GCV pass)."""
+    """Re-solve the readout from the current statistics (the eigh+GCV pass).
+
+    Under ``cfg.guard`` a row whose fresh solve comes back non-finite keeps
+    its last-good readout (``pipeline/ridge.guard_readout``) — the running
+    statistics are untouched, so the next refresh retries; rows whose
+    *statistics* are poisoned are handled upstream by the quarantine.
+    """
     f = cfg.features
     g = state.g[:, :f, :f]
     cvec = state.c[:, :f]
     lams = cfg.ridge_l2
     w, idx = jax.vmap(lambda gb, cb, y2b, nb: solve_gcv(
         gb, cb, y2b, nb, lams))(g, cvec, state.y2, state.tcnt)
-    return state._replace(w=w, lam_idx=idx.astype(jnp.int32))
+    idx = idx.astype(jnp.int32)
+    if cfg.guard:
+        w, idx = guard_readout(w, idx, state.w, state.lam_idx)
+    return state._replace(w=w, lam_idx=idx)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "refresh"))
@@ -266,7 +354,14 @@ def _session_step(cfg: SessionConfig, mask: jnp.ndarray, state: SessionState,
     data — honest online inference) and the Gram fold.  ``refresh`` is
     static: a server calls the fold+solve variant every
     ``cfg.refresh_every``-th tick and the fold-only variant otherwise, so
-    exactly two step programs are ever compiled.
+    exactly two step programs are ever compiled — the health guard is part
+    of both, not a third variant.
+
+    Under ``cfg.guard`` (default) the tick ends with the in-graph
+    quarantine: rows whose carry/Gram/readout/prediction went non-finite
+    are reset in place, their prediction zeroed, ``quarantined`` flagged
+    and ``poison`` incremented (DESIGN.md §12).  On clean data the guard
+    is bitwise invisible.
 
     Returns (y_hat [B, chunk_k, C], new state).
     """
@@ -280,6 +375,8 @@ def _session_step(cfg: SessionConfig, mask: jnp.ndarray, state: SessionState,
     state = _fold(cfg, state, states, y3, vfit, s_next)
     if refresh:
         state = _solve(cfg, state)
+    if cfg.guard:
+        y_hat, state = _quarantine(state, y_hat)
     return y_hat, state
 
 

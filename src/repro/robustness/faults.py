@@ -1,0 +1,216 @@
+"""Seedable, traced fault injection for DFR serving (DESIGN.md §12).
+
+The fault models are *pure transforms over the step inputs and carries* —
+nothing inside ``pipeline/session`` or the kernels changes.  A
+:class:`FaultSpec` carries one value per slot ([B] leaves, a pytree), so
+
+* it is **traced data**, not configuration: clean and faulted runs share
+  ONE compiled program (the neutral spec is a bitwise identity — see
+  below), which is what makes "healthy slots are bitwise identical to a
+  fault-free run" a meaningful gate rather than a compiler coincidence;
+* it is **vmappable per slot**: every model is elementwise in the batch
+  axis, so faults target individual sessions of the continuously-batched
+  slab without touching their neighbours;
+* it is **seedable and replayable**: stochastic faults draw from
+  ``fold_in(PRNGKey(seed), tick)`` with the tick as a traced operand, so a
+  crash-and-restore run re-injects the exact same faults at the exact same
+  ticks (the chaos soak's resume gate depends on this).
+
+Fault taxonomy (motivated by arXiv:2310.09433 — cavity nonlinearities and
+losses materially shift MR-RC behaviour — plus plain digital-link rot):
+
+===================  =====================================================
+``nan_prob``         per-period probability a drive sample becomes NaN
+                     (ADC glitch / dropped host tick)
+``inf_prob``         per-period probability a drive sample becomes +Inf
+                     (TIA rail / overflow)
+``corrupt_prob``     per-tick probability the reservoir carry row is
+                     poisoned with NaN (SEU in the state memory)
+``stuck_node``       virtual-node index held at ``stuck_value`` at every
+                     tick boundary (-1 = none) — a dead MR tap
+``detune_amp/period``MR thermal-detuning drift: slow sinusoidal
+                     multiplicative gain on the drive (period in reservoir
+                     periods)
+``droop_rate``       laser power droop: ``exp(-rate · t)`` gain decay over
+                     absolute periods
+``sat_level``        digitizer saturation: drive clipped to ±``sat_level``
+===================  =====================================================
+
+**Neutral-spec bitwise identity.**  :func:`no_faults` sets probs to 0
+(``u < 0`` never fires), ``stuck_node`` to -1 (never matches a node index),
+``detune_amp`` to 0 and ``droop_rate`` to 0 (gain is exactly 1.0, and
+``x * 1.0`` is IEEE-exact), and ``sat_level`` to +Inf (``clip(x, -inf,
+inf)`` returns x).  Every transform degenerates to a select of the
+identical value, so :func:`faulty_session_step` under the neutral spec is
+*bitwise* equal to the plain guarded ``session_step`` — pinned by
+tests/test_robustness.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.pipeline.session import (SessionConfig, SessionState,
+                                    _session_step, session_reset)
+
+__all__ = ["FaultSpec", "no_faults", "on_rows", "faulted_rows",
+           "inject_inputs", "inject_carry", "faulty_session_step",
+           "faulty_step"]
+
+
+class FaultSpec(NamedTuple):
+    """Per-slot fault intensities — a [B]-leaf pytree, traced like data."""
+
+    nan_prob: jnp.ndarray      # [B] f32 — P(drive sample -> NaN) per period
+    inf_prob: jnp.ndarray      # [B] f32 — P(drive sample -> +Inf) per period
+    corrupt_prob: jnp.ndarray  # [B] f32 — P(carry row -> NaN) per tick
+    stuck_node: jnp.ndarray    # [B] i32 — node held at stuck_value (-1 = none)
+    stuck_value: jnp.ndarray   # [B] f32 — the stuck-at level
+    detune_amp: jnp.ndarray    # [B] f32 — thermal-drift gain amplitude
+    detune_period: jnp.ndarray  # [B] f32 — drift period in periods (> 0)
+    droop_rate: jnp.ndarray    # [B] f32 — laser droop rate per period
+    sat_level: jnp.ndarray     # [B] f32 — digitizer full-scale (clip ±sat)
+    from_tick: jnp.ndarray     # [B] i32 — faults active from this tick …
+    until_tick: jnp.ndarray    # [B] i32 — … up to (excluding) this tick
+
+    @property
+    def batch(self) -> int:
+        return self.nan_prob.shape[0]
+
+    def active(self, tick) -> jnp.ndarray:
+        """[B] bool — slots whose fault window covers ``tick``.
+
+        Outside the window every transform selects the untouched value, so
+        a windowed fault is bitwise invisible before it starts and after it
+        ends — that is what lets the chaos soak grade *re-convergence*: arm
+        a poisoning fault for ticks [0, w), watch the quarantine fire, then
+        verify the slot learns again from the clean tail.
+        """
+        t = jnp.asarray(tick, jnp.int32)
+        return (t >= self.from_tick) & (t < self.until_tick)
+
+
+def no_faults(batch: int) -> FaultSpec:
+    """The neutral spec: a bitwise identity on every transform."""
+    z = jnp.zeros((batch,), jnp.float32)
+    return FaultSpec(
+        nan_prob=z, inf_prob=z, corrupt_prob=z,
+        stuck_node=jnp.full((batch,), -1, jnp.int32), stuck_value=z,
+        detune_amp=z, detune_period=jnp.ones((batch,), jnp.float32),
+        droop_rate=z, sat_level=jnp.full((batch,), jnp.inf, jnp.float32),
+        from_tick=jnp.zeros((batch,), jnp.int32),
+        until_tick=jnp.full((batch,), jnp.iinfo(jnp.int32).max, jnp.int32),
+    )
+
+
+def on_rows(spec: FaultSpec, rows, **fields) -> FaultSpec:
+    """Return ``spec`` with ``fields`` applied on the given slot indices.
+
+    ``on_rows(no_faults(8), [2, 5], nan_prob=0.2)`` arms a NaN-tick fault
+    on slots 2 and 5 and leaves every other slot neutral.
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+    upd = {}
+    for name, value in fields.items():
+        leaf = getattr(spec, name)
+        upd[name] = leaf.at[rows].set(jnp.asarray(value, leaf.dtype))
+    return spec._replace(**upd)
+
+
+def faulted_rows(spec: FaultSpec) -> jnp.ndarray:
+    """[B] bool — True where the slot's spec deviates from neutral."""
+    return ((spec.nan_prob > 0) | (spec.inf_prob > 0)
+            | (spec.corrupt_prob > 0) | (spec.stuck_node >= 0)
+            | (spec.detune_amp != 0) | (spec.droop_rate != 0)
+            | jnp.isfinite(spec.sat_level))
+
+
+def _tick_key(seed: int, tag: int, tick) -> jax.Array:
+    """Replayable per-(seed, fault-kind, tick) key; ``tick`` may be traced."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), tag)
+    return jax.random.fold_in(key, tick)
+
+
+def inject_inputs(spec: FaultSpec, j_chunk: jnp.ndarray, tick, *,
+                  seed: int = 0) -> jnp.ndarray:
+    """Apply the drive-side fault models to one [B, K] input chunk.
+
+    Order mirrors the physical signal path: MR thermal detuning and laser
+    droop modulate the optical drive (multiplicative gains over absolute
+    period index ``tick·K + k``), the digital link then drops/overflows
+    samples (NaN/Inf ticks), and the digitizer clips last.  Works on any
+    [B, K] drive chunk — ``session_step``'s per-tick chunk or a ``dfr_scan``
+    input split into chunks.  Slots outside their fault window pass the
+    chunk through bitwise untouched.
+    """
+    j0 = jnp.asarray(j_chunk, jnp.float32)
+    b, k = j0.shape
+    t_abs = (jnp.asarray(tick, jnp.int32) * k
+             + jnp.arange(k, dtype=jnp.int32))[None, :].astype(jnp.float32)
+    gain = 1.0 + spec.detune_amp[:, None] * jnp.sin(
+        (2.0 * jnp.pi) * t_abs / spec.detune_period[:, None])
+    gain = gain * jnp.exp(-spec.droop_rate[:, None] * t_abs)
+    j = j0 * gain
+    u = jax.random.uniform(_tick_key(seed, 0, tick), (b, k))
+    nanp = spec.nan_prob[:, None]
+    j = jnp.where(u < nanp, jnp.nan, j)
+    j = jnp.where((u >= nanp) & (u < nanp + spec.inf_prob[:, None]),
+                  jnp.inf, j)
+    j = jnp.clip(j, -spec.sat_level[:, None], spec.sat_level[:, None])
+    return jnp.where(spec.active(tick)[:, None], j, j0)
+
+
+def inject_carry(spec: FaultSpec, s: jnp.ndarray, tick, *,
+                 seed: int = 0) -> jnp.ndarray:
+    """Apply the state-side fault models to one [B, N] reservoir carry.
+
+    The stuck-at node is pinned at every tick boundary (a dead MR tap keeps
+    re-asserting itself); carry corruption poisons the whole row with NaN
+    with per-tick probability ``corrupt_prob`` (an SEU in state memory).
+    Slots outside their fault window pass through bitwise untouched.
+    """
+    s0 = jnp.asarray(s)
+    b, n = s0.shape
+    node = jnp.arange(n, dtype=jnp.int32)[None, :]
+    s = jnp.where(node == spec.stuck_node[:, None],
+                  spec.stuck_value[:, None].astype(s0.dtype), s0)
+    u = jax.random.uniform(_tick_key(seed, 1, tick), (b,))
+    s = jnp.where((u < spec.corrupt_prob)[:, None],
+                  jnp.asarray(jnp.nan, s0.dtype), s)
+    return jnp.where(spec.active(tick)[:, None], s, s0)
+
+
+def faulty_session_step(cfg: SessionConfig, mask: jnp.ndarray,
+                        spec: FaultSpec, state: SessionState,
+                        j_chunk: jnp.ndarray, y_chunk: jnp.ndarray, tick, *,
+                        seed: int = 0, refresh: bool = False,
+                        n_valid: jnp.ndarray | None = None,
+                        reset: jnp.ndarray | None = None):
+    """``session_step`` with the fault models wrapped around its inputs.
+
+    Pure wrapper: slot resets land first (exactly where the clean step
+    applies them), then the carry- and drive-side injections, then the
+    unmodified serving tick — the health guard inside ``_session_step``
+    (DESIGN.md §12) is what the injected faults exercise.  ``spec`` and
+    ``tick`` are traced operands; ``seed`` is static.  Under the neutral
+    spec the whole wrapper is bitwise invisible (module docstring).
+    """
+    if reset is not None:
+        state = session_reset(state, reset)
+    tick = jnp.asarray(tick, jnp.int32)
+    state = state._replace(s=inject_carry(spec, state.s, tick, seed=seed))
+    j = inject_inputs(spec, j_chunk, tick, seed=seed)
+    return _session_step(cfg, mask, state, j, y_chunk, refresh=refresh,
+                         n_valid=n_valid, reset=None)
+
+
+# jit-per-(cfg, seed, refresh): the same two compiled variants as the clean
+# step (fold-only / fold+solve) — faults ride on traced operands, never on
+# new program shapes.  Servers re-jit with donate_argnums=(3,) to keep the
+# slab donated (launch/serve_dfr.py).
+faulty_step = functools.partial(
+    jax.jit, static_argnames=("cfg", "seed", "refresh"))(faulty_session_step)

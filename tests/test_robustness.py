@@ -1,0 +1,308 @@
+"""Fault injection, in-graph quarantine, and crash-recoverable serving.
+
+Pins the ISSUE 8 contracts (DESIGN.md §12):
+
+* the fault harness is *traced and bitwise-neutral*: under ``no_faults`` the
+  fault-injected step equals the clean ``session_step`` bit for bit, so a
+  clean/faulted pair is an apples-to-apples comparison of one program;
+* poisoning faults (NaN/Inf drive, carry corruption) trip the in-graph
+  quarantine: the row is reset in place, flagged and counted, its neighbours
+  bitwise untouched, and no non-finite prediction ever reaches the host;
+* degradation faults (stuck-at node, thermal detuning, laser droop,
+  digitizer saturation) perturb only their own slot and never trip the
+  guard — they are physics drift, not poison;
+* a quarantined slot *re-converges* once its fault window closes;
+* the ``DFRServer`` layers work: ingest validation drops non-finite ticks,
+  ``max_poison`` evicts dead slots, and a kill-and-restore through
+  ``CheckpointStore`` resumes bit-exactly (faults replaying identically).
+
+The program-shape contracts of the faulted step (no host callback, no
+full-stream tensor, one Pallas launch pair) are registered entry points in
+``repro.analysis`` — tests/test_analysis.py and CI run them.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SiliconMR
+from repro.core.masking import make_mask
+from repro.pipeline.ridge import guard_readout
+from repro.pipeline.session import (SessionConfig, session_init,
+                                    session_step)
+from repro.robustness import (faulted_rows, faulty_step, inject_carry,
+                              inject_inputs, no_faults, on_rows, run_soak)
+
+N, B, WASH, CHUNK = 16, 4, 24, 24
+LAMS = (1e-8, 1e-6, 1e-4)
+MASK = jnp.asarray(make_mask(N, seed=3))
+
+
+def _cfg(**kw) -> SessionConfig:
+    base = dict(model=SiliconMR(), n_nodes=N, washout=WASH, ridge_l2=LAMS,
+                chunk_k=CHUNK, refresh_every=2, state_method="fast")
+    base.update(kw)
+    return SessionConfig(**base)
+
+
+def _chunks(seed: int, ticks: int, b: int = B, k: int = CHUNK):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.uniform(0, 1, (b, ticks * k)), jnp.float32),
+            jnp.asarray(rng.uniform(0, 1, (b, ticks * k)), jnp.float32))
+
+
+def _run_clean(cfg, j, y, ticks):
+    st = session_init(cfg, B)
+    outs = []
+    for t in range(ticks):
+        sl = slice(t * cfg.chunk_k, (t + 1) * cfg.chunk_k)
+        yh, st = session_step(cfg, MASK, st, j[:, sl], y[:, sl],
+                              refresh=(t % cfg.refresh_every) == 0)
+        outs.append(np.asarray(yh))
+    return np.concatenate(outs, axis=1), jax.device_get(st)
+
+
+def _run_faulted(cfg, spec, j, y, ticks, seed=0):
+    st = session_init(cfg, B)
+    outs = []
+    for t in range(ticks):
+        sl = slice(t * cfg.chunk_k, (t + 1) * cfg.chunk_k)
+        yh, st = faulty_step(cfg, MASK, spec, st, j[:, sl], y[:, sl], t,
+                             seed=seed, refresh=(t % cfg.refresh_every) == 0)
+        outs.append(np.asarray(yh))
+    return np.concatenate(outs, axis=1), jax.device_get(st)
+
+
+# ---------------------------------------------------------------------------
+# fault harness: neutrality + targeting
+# ---------------------------------------------------------------------------
+
+
+def test_neutral_spec_is_bitwise_identity():
+    """no_faults wraps session_step with zero numerical footprint."""
+    cfg = _cfg()
+    j, y = _chunks(0, 4)
+    yh_a, st_a = _run_clean(cfg, j, y, 4)
+    yh_b, st_b = _run_faulted(cfg, no_faults(B), j, y, 4)
+    np.testing.assert_array_equal(yh_a, yh_b)
+    for la, lb in zip(st_a, st_b):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_injectors_neutral_and_targeted():
+    spec = no_faults(B)
+    rng = np.random.default_rng(1)
+    jc = jnp.asarray(rng.uniform(0, 1, (B, CHUNK)), jnp.float32)
+    s = jnp.asarray(rng.standard_normal((B, N)), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(inject_inputs(spec, jc, 3)),
+                                  np.asarray(jc))
+    np.testing.assert_array_equal(np.asarray(inject_carry(spec, s, 3)),
+                                  np.asarray(s))
+    armed = on_rows(spec, [1], stuck_node=2, stuck_value=0.5)
+    out = np.array(inject_carry(armed, s, 3))
+    assert out[1, 2] == 0.5
+    out[1, 2] = np.asarray(s)[1, 2]
+    np.testing.assert_array_equal(out, np.asarray(s))
+    assert np.asarray(faulted_rows(armed)).tolist() == [False, True,
+                                                        False, False]
+
+
+def test_fault_window_gates_injection():
+    """Outside [from_tick, until_tick) the armed spec is still an identity."""
+    spec = on_rows(no_faults(B), [0], nan_prob=1.0, from_tick=2, until_tick=3)
+    rng = np.random.default_rng(2)
+    jc = jnp.asarray(rng.uniform(0, 1, (B, CHUNK)), jnp.float32)
+    for tick, fires in ((0, False), (1, False), (2, True), (3, False)):
+        out = np.asarray(inject_inputs(spec, jc, tick))
+        assert np.isnan(out[0]).any() == fires, tick
+        np.testing.assert_array_equal(out[1:], np.asarray(jc)[1:])
+
+
+# ---------------------------------------------------------------------------
+# in-graph quarantine: containment + isolation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fault", [dict(nan_prob=1.0), dict(inf_prob=1.0),
+                                   dict(corrupt_prob=1.0)])
+def test_poison_quarantines_row_and_isolates_neighbours(fault):
+    cfg = _cfg()
+    j, y = _chunks(3, 3)
+    yh_clean, st_clean = _run_clean(cfg, j, y, 3)
+    spec = on_rows(no_faults(B), [1], **fault)
+    yh, st = _run_faulted(cfg, spec, j, y, 3)
+    # containment: flagged, counted, reset, and never a NaN to the host
+    assert np.asarray(st.quarantined)[1]
+    assert np.asarray(st.poison)[1] == 3
+    assert np.isfinite(yh).all()
+    np.testing.assert_array_equal(yh[1], np.zeros_like(yh[1]))
+    # the in-graph reset rewound the row to the dark state this tick
+    assert np.asarray(st.s)[1].sum() == 0 and np.asarray(st.step)[1] == 0
+    # isolation: every other slot is bitwise the clean run
+    ok = np.asarray([True, False, True, True])
+    np.testing.assert_array_equal(yh[ok], yh_clean[ok])
+    for la, lb in zip(st_clean, st):
+        np.testing.assert_array_equal(np.asarray(la)[ok], np.asarray(lb)[ok])
+
+
+def test_degradation_faults_perturb_without_quarantine():
+    """Stuck node / detuning / droop / saturation are drift, not poison.
+
+    Five ticks so the comparison covers predictions made with a *solved*
+    readout — with washout = 1 chunk and refresh_every = 2 the first
+    non-zero readout applies from tick 3 on.
+    """
+    cfg = _cfg()
+    j, y = _chunks(4, 5)
+    yh_clean, _ = _run_clean(cfg, j, y, 5)
+    spec = on_rows(no_faults(B), [0], stuck_node=3, stuck_value=0.5)
+    spec = on_rows(spec, [1], detune_amp=0.5, detune_period=64.0)
+    spec = on_rows(spec, [2], droop_rate=0.02)
+    spec = on_rows(spec, [3], sat_level=0.3)
+    yh, st = _run_faulted(cfg, spec, j, y, 5)
+    assert np.isfinite(yh).all()
+    assert not np.asarray(st.quarantined).any()
+    assert np.asarray(st.poison).sum() == 0
+    for i in range(B):  # each fault measurably moves its own slot
+        assert not np.array_equal(yh[i], yh_clean[i]), i
+
+
+def test_quarantined_slot_reconverges_after_window():
+    """The acceptance gate: poison for 4 ticks, clean tail -> learns again."""
+    cfg = _cfg(n_nodes=24, washout=32, chunk_k=32)
+    spec = on_rows(no_faults(B), [2], corrupt_prob=1.0, until_tick=4)
+    rep = run_soak(cfg, spec, n_ticks=24)
+    assert rep["healthy_bitwise_identical"]
+    assert rep["output_all_finite"]
+    assert rep["quarantine_events"] == [0, 0, 4, 0]
+    assert rep["quarantine_ticks"][2] == [0, 1, 2, 3]
+    # post-window the slot's tail SER is real signal, not chance (0.75 for
+    # 4-level symbols), and comparable to the never-faulted reference
+    assert rep["tail_ser_faulty"] < 0.5
+    assert rep["tail_ser_faulty"] <= rep["tail_ser_clean"] + 0.15
+
+
+def test_guard_off_documents_the_failure_mode():
+    """Without the guard one NaN tick poisons the slot permanently — the
+    exact behaviour DESIGN.md §12 exists to kill."""
+    cfg = _cfg(guard=False)
+    j, y = _chunks(5, 3)
+    spec = on_rows(no_faults(B), [1], nan_prob=1.0, until_tick=1)
+    yh, st = _run_faulted(cfg, spec, j, y, 3)
+    assert np.isnan(yh[1]).any()            # NaN reached the host
+    assert np.isnan(np.asarray(st.g)[1]).any()   # ... and stuck in the Gram
+    assert np.isfinite(yh[[0, 2, 3]]).all()  # rows stay independent either way
+
+
+def test_guard_readout_falls_back_per_row():
+    rng = np.random.default_rng(6)
+    w_new = jnp.asarray(rng.standard_normal((3, 5, 1)), jnp.float32)
+    w_new = w_new.at[1, 0, 0].set(jnp.nan)
+    idx_new = jnp.asarray([2, 2, 0], jnp.int32)
+    w_last = jnp.asarray(rng.standard_normal((3, 5, 1)), jnp.float32)
+    idx_last = jnp.asarray([1, 1, 1], jnp.int32)
+    w, idx = guard_readout(w_new, idx_new, w_last, idx_last)
+    np.testing.assert_array_equal(np.asarray(w[0]), np.asarray(w_new[0]))
+    np.testing.assert_array_equal(np.asarray(w[1]), np.asarray(w_last[1]))
+    np.testing.assert_array_equal(np.asarray(w[2]), np.asarray(w_new[2]))
+    assert np.asarray(idx).tolist() == [2, 1, 0]
+
+
+def test_guard_bitwise_invisible_on_kernel_path():
+    """Guarded vs unguarded step on clean data: bit-identical (Pallas path
+    included), so enabling the default guard costs no numerics anywhere."""
+    cfg_on = _cfg(state_method="kernel", use_kernel=True)
+    cfg_off = _cfg(state_method="kernel", use_kernel=True, guard=False)
+    j, y = _chunks(7, 3)
+    yh_a, st_a = _run_clean(cfg_on, j, y, 3)
+    yh_b, st_b = _run_clean(cfg_off, j, y, 3)
+    np.testing.assert_array_equal(yh_a, yh_b)
+    for name, la, lb in zip(st_a._fields, st_a, st_b):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# DFRServer: ingest validation, eviction, crash recovery
+# ---------------------------------------------------------------------------
+
+
+def _mk_requests(n, length, seed=0):
+    from repro.launch.serve_dfr import StreamRequest
+    rng = np.random.default_rng(seed)
+    return [StreamRequest(rid=r, j=rng.random(length).astype(np.float32),
+                          y=rng.random(length).astype(np.float32))
+            for r in range(n)]
+
+
+def test_server_ingest_drops_nonfinite_and_clamps(tmp_path):
+    from repro.launch.serve_dfr import DFRServer
+    cfg = _cfg()
+    server = DFRServer(cfg, 2, ingest_range=(0.0, 1.0))
+    server.warmup()
+    reqs = _mk_requests(2, 3 * CHUNK, seed=8)
+    reqs[0].j[CHUNK + 3] = np.nan          # one bad sample -> tick dropped
+    reqs[1].j[5] = 7.0                     # out of range -> clamped
+    for r in reqs:
+        server.submit(r)
+    server.drain()
+    stats = server.stats()
+    assert stats["dropped_ticks"] == 1 and stats["dropped_values"] == 1
+    assert stats["clamped_values"] == 1
+    assert stats["completed"] == 2
+    # the sanitized run never tripped the in-graph guard, and every emitted
+    # prediction (including the dropped tick's zero-drive chunk) is finite
+    assert stats["quarantine_events"] == 0
+    for r in server.completed:
+        assert np.isfinite(np.concatenate(r.y_hat)).all()
+
+
+def test_server_evicts_dead_slot():
+    from repro.launch.serve_dfr import DFRServer
+    cfg = _cfg()
+    spec = on_rows(no_faults(2), [0], corrupt_prob=1.0)  # slot 0 always dies
+    server = DFRServer(cfg, 2, fault_spec=spec, max_poison=2)
+    server.warmup()
+    for r in _mk_requests(2, 8 * CHUNK, seed=9):
+        server.submit(r)
+    server.drain()
+    stats = server.stats()
+    assert stats["evictions"] == 1 and len(server.evicted) == 1
+    assert server.evicted[0].rid == 0
+    assert stats["completed"] == 1
+    assert stats["quarantine_events"] >= 2
+
+
+def test_server_kill_and_restore_is_bit_exact(tmp_path):
+    from repro.launch.serve_dfr import DFRServer
+    cfg = _cfg()
+    spec = on_rows(no_faults(2), [1], nan_prob=0.02, until_tick=5)
+
+    def fresh(ckpt=None, every=0):
+        s = DFRServer(cfg, 2, fault_spec=spec, fault_seed=11,
+                      checkpoint_dir=ckpt, checkpoint_every=every)
+        s.warmup()
+        return s
+
+    ref = fresh()
+    for r in _mk_requests(3, 5 * CHUNK, seed=10):
+        ref.submit(r)
+    ref.drain()
+    expect = {r.rid: np.concatenate(r.y_hat) for r in ref.completed}
+
+    crash = fresh(ckpt=str(tmp_path), every=2)
+    for r in _mk_requests(3, 5 * CHUNK, seed=10):
+        crash.submit(r)
+    for _ in range(5):
+        crash.step()
+    crash.close()                          # "kill" mid-stream
+
+    resumed = fresh(ckpt=str(tmp_path))
+    assert resumed.restore() == 4
+    assert resumed.stats()["restored_from"] == 4
+    resumed.drain()
+    got = {r.rid: np.concatenate(r.y_hat) for r in resumed.completed}
+    assert set(got) == set(expect)
+    for rid in expect:
+        np.testing.assert_array_equal(expect[rid], got[rid])
