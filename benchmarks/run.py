@@ -16,11 +16,11 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list of fig5,fig6,fig7,table1,kernels,"
                          "kernel_batching,streaming_fusion,wdm_streaming,"
-                         "dfr_serving,chaos_soak,roofline")
+                         "composed_reservoirs,dfr_serving,chaos_soak,roofline")
     args = ap.parse_args()
 
-    from . import (chaos_soak, dfr_serving, fig5_nrmse, fig6_ser,
-                   fig7_training_time, kernel_batching, kernel_bench,
+    from . import (chaos_soak, composed_reservoirs, dfr_serving, fig5_nrmse,
+                   fig6_ser, fig7_training_time, kernel_batching, kernel_bench,
                    roofline, streaming_fusion, table1_power, wdm_streaming)
 
     sections = {
@@ -32,6 +32,7 @@ def main() -> None:
         "kernel_batching": kernel_batching.run,
         "streaming_fusion": streaming_fusion.run,
         "wdm_streaming": wdm_streaming.run,
+        "composed_reservoirs": composed_reservoirs.run,
         "dfr_serving": dfr_serving.run,
         "chaos_soak": chaos_soak.run,
         "roofline": roofline.run,

@@ -1,0 +1,75 @@
+"""Deep reservoir graphs: composition beats a single loop at matched size.
+
+The paper's accelerator is ONE delay loop + ONE MR neuron; the related work
+composes reservoirs — series-coupled microrings with high linear memory
+capacity (arXiv:2308.15902) and deep photonic RC with an on-chip link
+nonlinearity between layers (arXiv:2512.10626).  This example builds both a
+depth-1 single loop (the paper's operating point) and a depth-2
+series-coupled chain with the SAME total virtual node count, runs each as a
+streamed `Experiment` (`ExperimentConfig.topology` — the composed per-stage
+carries thread through one chunk scan, so no stage ever materializes a
+[B, T, N] block), and scores them on the linear memory-capacity probe:
+
+* depth-1: 48 nodes, one τ_ph = 50 ps ring (SiliconMR defaults);
+* depth-2: a 40-node slow ring (τ_ph = 150 ps) whose mean-tap output drives
+  an 8-node paper-point ring through a sin² (MZI) link biased at its
+  max-slope point — the heterogeneous-Q series coupling of arXiv:2308.15902.
+
+MC = Σ_d r²(u(k−d), ŷ_d): how many delayed copies of the input the readout
+can reconstruct (one multi-channel fit reconstructs every delay at once —
+the whole suite is ONE vmapped jit call per topology).  Measured: the
+depth-2 chain scores ≈ 5.2 vs ≈ 4.2 for the matched single loop, a ~25%
+capacity gain from topology alone; benchmarks/composed_reservoirs.py runs
+the full depth × loops grid and gates this payoff in CI.
+
+  PYTHONPATH=src python examples/deep_reservoir.py
+"""
+
+import numpy as np
+
+from repro.core import ReservoirStage, SiliconMR, chain, tasks
+from repro.core.metrics import memory_capacity_score
+from repro.pipeline import Experiment, ExperimentConfig
+
+MAX_DELAY = 24
+SEEDS = 3
+
+paper_ring = SiliconMR()                  # τ_ph = 50 ps operating point
+slow_ring = SiliconMR(tau_ph_ps=150.0)    # engineered lower-Q ring
+
+topologies = {
+    "depth-1 (48 nodes, one loop)": chain(
+        ReservoirStage(model=paper_ring, n_nodes=48, mask_seed=3)),
+    # sin² link biased at max slope: the 40-node stage's mean-tap drive is
+    # ≈ 2.8 ± 0.4, and 0.28 · 2.8 ≈ π/4 where |d sin²/dp| peaks
+    "depth-2 (40 slow -> 8 paper)": chain(
+        ReservoirStage(model=slow_ring, n_nodes=40, mask_seed=3,
+                       link="sin2", link_gain=0.28),
+        ReservoirStage(model=paper_ring, n_nodes=8, mask_seed=10)),
+}
+
+# one MC probe, SEEDS instances stacked on the vmapped batch axis
+batch = [tasks.memory_capacity(1200, max_delay=MAX_DELAY, seed=s)
+         for s in range(SEEDS)]
+tr_in, tr_tg, te_in, te_tg = (
+    np.stack([getattr(d, f) for d in batch])
+    for f in ("inputs_train", "targets_train", "inputs_test", "targets_test"))
+
+print(f"{'topology':32s} width  MC (of {MAX_DELAY} delay channels)")
+scores = {}
+for name, graph in topologies.items():
+    cfg = ExperimentConfig(model=paper_ring, n_nodes=graph.width, washout=40,
+                           ridge_l2=(1e-8, 1e-6, 1e-4), topology=graph,
+                           stream_chunk_k=64, state_method="fast",
+                           state_noise_rel=0.0)
+    res = Experiment(cfg).run(tr_in, tr_tg, te_in, te_tg)
+    mcs = [memory_capacity_score(te_tg[b], res.y_pred[b])
+           for b in range(SEEDS)]
+    scores[name] = float(np.mean(mcs))
+    print(f"{name:32s} {graph.width:4d}  {scores[name]:.2f} "
+          f"(per seed: {', '.join(f'{m:.2f}' for m in mcs)})")
+
+d1, d2 = scores.values()
+print(f"\ndepth-2 vs depth-1 at matched {48} virtual nodes: "
+      f"{100 * (d2 / d1 - 1):+.1f}% memory capacity")
+assert d2 > d1, "composition should beat the matched single loop"

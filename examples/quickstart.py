@@ -11,6 +11,9 @@ inputs to sweep seeds or SNRs in the same call.
 
 Where to next:
   examples/channel_equalization.py — the offline SNR sweep (Fig. 6)
+  examples/deep_reservoir.py       — composed reservoir graphs: a depth-2
+                                     series-coupled chain beats the matched
+                                     single loop on memory capacity
   examples/online_equalization.py  — ONLINE readouts tracking a drifting
                                      link (RLS forgetting, DESIGN.md §10)
   launch/serve_dfr.py              — continuous-batching DFR serving:

@@ -169,6 +169,81 @@ def _fit_ridge_streaming_wdm():
             _streaming_fit_rules())
 
 
+# Composed-graph trace shapes: a depth-3 chain whose smallest stage sets the
+# NoStateTensor floor — ANY stage materializing its full-T [B·L, T, N] block
+# (the smallest is _B·_T_TR·8 elements) trips the rule, while the O(B·T)
+# input/target streams stay well under it.
+def _trace_graph(depth: int):
+    from repro.core import ReservoirStage, SiliconMR, chain
+    stages = [ReservoirStage(model=SiliconMR(), n_nodes=_N, loops=2,
+                             mask_seed=1),
+              ReservoirStage(model=SiliconMR(), n_nodes=_N, mask_seed=7),
+              ReservoirStage(model=SiliconMR(), n_nodes=8, mask_seed=13,
+                             link="sin2")]
+    return chain(*stages[-depth:])
+
+
+@register("fit_ridge_streaming_composed",
+          "Composed depth-3 streamed fit: stage chain per chunk, ONE scan")
+def _fit_ridge_streaming_composed():
+    from repro.core import build_stage_masks
+    from repro.pipeline import fit_ridge_streaming_composed
+    graph = _trace_graph(3)
+    masks = build_stage_masks(graph)
+    kw = dict(washout=_W0, chunk_k=_CHUNK, lambdas=_LAMS,
+              state_method="kernel", use_kernel=True)
+    j = jnp.zeros((_B, _T_TR), jnp.float32)
+    prog = Program(lambda jj, yy: fit_ridge_streaming_composed(
+        graph, masks, jj, yy, **kw), (j, j),
+        name="fit_ridge_streaming_composed")
+    w_min = min(st.n_nodes for st in graph.stages)
+    rules = (NoHostCallback(), NoDtypeAbove("float32"),
+             MaxScans(1),                          # the whole chain, one scan
+             MaxPallasCalls(graph.depth + 1),      # one dfr_scan/stage + Gram
+             VmemBudget(),
+             NoStateTensor(_T_TR, _B * _T_TR * w_min,
+                           what="full-stream stage tensor"),
+             DonationHonored(min_pallas_aliases=2))
+    return prog, rules
+
+
+@register("fit_ridge_streaming_shared",
+          "Shared-readout WDM fit: one cross-channel Gram, ONE launch pair")
+def _fit_ridge_streaming_shared():
+    from repro.core import SiliconMR, make_mask
+    from repro.pipeline import fit_ridge_streaming_shared
+    model = SiliconMR()
+    masks = jnp.stack([make_mask(_N, seed=40 + i) for i in range(_B)])
+    kw = dict(washout=_W0, chunk_k=_CHUNK, lambdas=_LAMS,
+              state_method="kernel", use_kernel=True)
+    j = jnp.zeros((_B, _T_TR), jnp.float32)
+    y = jnp.zeros((_T_TR,), jnp.float32)
+    prog = Program(lambda jj, yy: fit_ridge_streaming_shared(
+        model, masks, jj, yy, **kw), (j, y),
+        name="fit_ridge_streaming_shared")
+    return prog, _streaming_fit_rules()
+
+
+@register("experiment_composed",
+          "Depth-2 composed Experiment: streamed fit + eval, no stage tensor")
+def _experiment_composed():
+    graph = _trace_graph(2)
+    prog = _pipeline_program("experiment_composed", state_method="kernel",
+                             readout_use_kernel=True, stream_chunk_k=_CHUNK,
+                             topology=graph)
+    w_min = min(st.n_nodes for st in graph.stages)
+    rules = (NoHostCallback(), NoDtypeAbove("float32"),
+             MaxScans(2),                          # one fit scan + one eval scan
+             # fit: one dfr_scan per stage + Gram; eval: one dfr_scan per stage
+             MaxPallasCalls(2 * graph.depth + 1),
+             VmemBudget(),
+             NoStateTensor(_T_TR, _B * _T_TR * w_min,
+                           what="train stage tensor"),
+             NoStateTensor(_T_TE, _B * _T_TE * w_min,
+                           what="test stage tensor"))
+    return prog, rules
+
+
 def _session_program(name, *, refresh, donate=False, **cfg_kw):
     from repro.core import make_mask
     from repro.pipeline.session import (SessionConfig, _session_step,

@@ -2,27 +2,37 @@
 
 from . import power, tasks, timing
 from .accelerator import DFRCAccelerator, DFRCConfig
+from .graph import (ReservoirGraph, ReservoirStage, build_stage_masks, chain,
+                    graph_states)
 from .masking import make_mask, masked_input, mls_sequence, sample_and_hold
-from .metrics import nrmse, ser
-from .nonlinear import MZISine, MackeyGlass, NLModel, SiliconMR, SiliconMRLiteral
+from .metrics import memory_capacity_score, nrmse, ser
+from .nonlinear import (LINK_NONLINEARITIES, MZISine, MackeyGlass, NLModel,
+                        SiliconMR, SiliconMRLiteral)
 from .readout import Readout, fit_readout
 from .reservoir import generate_channel_states, generate_states, init_state
 
 __all__ = [
     "DFRCAccelerator",
     "DFRCConfig",
+    "LINK_NONLINEARITIES",
     "MZISine",
     "MackeyGlass",
     "NLModel",
     "Readout",
+    "ReservoirGraph",
+    "ReservoirStage",
     "SiliconMR",
     "SiliconMRLiteral",
+    "build_stage_masks",
+    "chain",
     "fit_readout",
     "generate_channel_states",
     "generate_states",
+    "graph_states",
     "init_state",
     "make_mask",
     "masked_input",
+    "memory_capacity_score",
     "mls_sequence",
     "nrmse",
     "power",

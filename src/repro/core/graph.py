@@ -1,0 +1,281 @@
+"""Composable reservoir graphs: deep, multi-loop, series-coupled topologies.
+
+The paper's accelerator is ONE delay loop + ONE MR neuron; the related work
+scales capacity by *composing* reservoirs — deep/cascaded photonic RC with an
+on-chip nonlinearity between layers (arXiv:2512.10626), series-coupled
+microrings with high linear memory capacity (arXiv:2308.15902), and
+multi-loop delay reservoirs whose L loops share one drive (SNIPPETS.md §1's
+``loops`` parameter).  This module is the graph abstraction those topologies
+share (DESIGN.md §13):
+
+* :class:`ReservoirStage` — one delay-loop layer: a nonlinearity (``model``),
+  ``n_nodes`` virtual nodes per loop, ``loops`` parallel delay loops sharing
+  the stage's scalar drive (each loop with its own MLS mask, so L·N virtual
+  nodes see L mask phases of one input), and the *link* that feeds the next
+  stage (a static projection of this stage's node states through an on-chip
+  link nonlinearity — ``nonlinear.LINK_NONLINEARITIES``).
+* :class:`ReservoirGraph` — a series chain of stages.  Stage k + 1's drive is
+  stage k's linked output, period by period; the readout features are the
+  concatenation of every stage's node states, so the graph is a drop-in
+  ``states``-producer of width ``graph.width``.
+
+Both are frozen dataclasses of Python scalars — hashable jit statics, like
+the NL models themselves.  The *arrays* (per-stage mask stacks) are built
+separately by :func:`build_stage_masks` and passed as operands.
+
+Execution contract (the reason this lives in ``core/``): every stage is a
+per-chunk transformer ``(drive [B, chunk], carry [B, L, N]) -> (features
+[B, chunk, L·N], carry')`` — exactly the shape of the PR 3/4 chunk-scan
+machinery — so layer k's streamed chunk feeds layer k + 1 *inside one scan
+step* and no stage ever materialises a full-T [B, T, N] block on the
+streaming path (pipeline/ridge.fit_ridge_streaming_composed; enforced by
+``repro.analysis`` NoStateTensor contracts).  :func:`graph_states` is the
+materialized reference oracle for tests and small runs; depth-1/loops-1
+graphs reduce to a literal ``generate_states`` call, so the legacy single
+reservoir is the depth-1 special case, bit for bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .masking import make_mask
+from .nonlinear import LINK_NONLINEARITIES, NLModel, SiliconMR
+from .reservoir import generate_channel_states, generate_states
+
+
+@dataclasses.dataclass(frozen=True)
+class ReservoirStage:
+    """One delay-loop layer of a reservoir graph (hashable jit static).
+
+    ``loops`` > 1 is the multi-loop topology: L physically separate delay
+    loops (each τ = N·θ long, each with its own MLS mask phase) driven by the
+    SAME scalar input — L·N virtual nodes share one drive, and the θ-chain
+    of each loop closes on *its own* previous period, never across loops
+    (the loops run as independent batch lanes; on the Pallas path all B·L
+    lanes are ONE kernel launch via the per-lane mask BlockSpec).
+
+    ``link``/``link_gain`` shape the drive this stage feeds the next one:
+    the stage's L·N node states are projected (uniform mean — a static,
+    mask-free tap of the delay line), scaled by ``link_gain`` and passed
+    through the named on-chip link nonlinearity.  The bounded defaults
+    (``sat``) keep a downstream SiliconMR inside the [0, 1] drive range the
+    device models are tuned on.  The last stage's link is unused.
+
+    ``input_gain`` scales this stage's incoming drive (1.0 = transparent;
+    the Python-level ``!= 1.0`` check keeps the default bit-identical to
+    the ungained path).
+    """
+
+    model: NLModel = dataclasses.field(default_factory=SiliconMR)
+    n_nodes: int = 100
+    loops: int = 1
+    mask_seed: int = 1
+    mask_levels: tuple[float, float] = (0.0, 1.0)
+    input_gain: float = 1.0
+    link: str = "sat"
+    link_gain: float = 1.0
+
+    def __post_init__(self):
+        if self.n_nodes < 1:
+            raise ValueError(f"n_nodes must be >= 1, got {self.n_nodes}")
+        if self.loops < 1:
+            raise ValueError(f"loops must be >= 1, got {self.loops}")
+        if self.link not in LINK_NONLINEARITIES:
+            raise ValueError(f"unknown link {self.link!r}; "
+                             f"known: {sorted(LINK_NONLINEARITIES)}")
+
+    @property
+    def width(self) -> int:
+        """Virtual nodes this stage contributes to the readout features."""
+        return self.n_nodes * self.loops
+
+
+@dataclasses.dataclass(frozen=True)
+class ReservoirGraph:
+    """A series chain of :class:`ReservoirStage` layers (hashable static)."""
+
+    stages: tuple[ReservoirStage, ...]
+
+    def __post_init__(self):
+        if not isinstance(self.stages, tuple):
+            object.__setattr__(self, "stages", tuple(self.stages))
+        if len(self.stages) < 1:
+            raise ValueError("a ReservoirGraph needs at least one stage")
+        for st in self.stages:
+            if not isinstance(st, ReservoirStage):
+                raise TypeError(f"stages must be ReservoirStage, got {st!r}")
+
+    @property
+    def depth(self) -> int:
+        return len(self.stages)
+
+    @property
+    def width(self) -> int:
+        """Total readout feature nodes: Σ per-stage n_nodes·loops."""
+        return sum(st.width for st in self.stages)
+
+    @property
+    def carry_layout(self) -> tuple[tuple[int, int], ...]:
+        """Per-stage (loops, n_nodes) — the shape of each carry leaf past
+        the batch axis, and the slice layout of a feature row."""
+        return tuple((st.loops, st.n_nodes) for st in self.stages)
+
+
+def chain(*stages: ReservoirStage) -> ReservoirGraph:
+    """Convenience constructor: ``chain(stage0, stage1, ...)``."""
+    return ReservoirGraph(stages=tuple(stages))
+
+
+def single(graph_or_stage) -> bool:
+    """True when the graph is the depth-1 / loops-1 legacy special case."""
+    if isinstance(graph_or_stage, ReservoirStage):
+        return graph_or_stage.loops == 1
+    g = graph_or_stage
+    return g.depth == 1 and g.stages[0].loops == 1
+
+
+def build_stage_masks(graph: ReservoirGraph, *, channels: int | None = None):
+    """The graph's mask arrays: a tuple of per-stage [L, N] stacks.
+
+    Loop l of stage s gets ``make_mask(N_s, seed=stage.mask_seed + l)`` —
+    the same ``seed + offset`` convention the WDM channel masks use.  With
+    ``channels=R`` (a per-channel topology under ``WDMExperiment``) each
+    stage gets an [R, L, N] stack, channel r / loop l seeded at
+    ``mask_seed + r·L + l`` so no two (channel, loop) lanes share a mask
+    phase; ``channels=None`` shares each stage's masks across the batch
+    (the instance-sweep workload), matching the legacy single-mask
+    broadcast at depth 1.
+    """
+    masks = []
+    for stage in graph.stages:
+        if channels is None:
+            masks.append(jnp.stack([
+                make_mask(stage.n_nodes, levels=stage.mask_levels,
+                          seed=stage.mask_seed + l)
+                for l in range(stage.loops)]))
+        else:
+            masks.append(jnp.stack([
+                jnp.stack([make_mask(stage.n_nodes, levels=stage.mask_levels,
+                                     seed=stage.mask_seed + r * stage.loops + l)
+                           for l in range(stage.loops)])
+                for r in range(channels)]))
+    return tuple(masks)
+
+
+def stage_link_drive(stage: ReservoirStage, features: jnp.ndarray) -> jnp.ndarray:
+    """The drive this stage feeds the next: [..., W] features -> [...].
+
+    Uniform mean over the stage's L·N nodes (a static tap of the delay
+    line — every node weighted equally, so the projection adds no trainable
+    or seeded parameters), scaled by ``link_gain``, through the stage's
+    on-chip link nonlinearity.  Always computed in f32: with bf16 state
+    chunks the emitted features are rounded, and the inter-stage drive
+    should not round twice.
+    """
+    p = jnp.mean(features.astype(jnp.float32), axis=-1)
+    if stage.link_gain != 1.0:
+        p = p * jnp.float32(stage.link_gain)
+    return LINK_NONLINEARITIES[stage.link](p)
+
+
+def stage_states(
+    stage: ReservoirStage,
+    drive: jnp.ndarray,      # [B, K] this stage's scalar drive
+    masks: jnp.ndarray,      # [L, N] shared or [B, L, N] per-instance masks
+    s0: jnp.ndarray | None,  # [B, L, N] carry (None = dark loops)
+    *,
+    method: str = "fast",
+    block_s: int | None = None,
+    state_dtype=None,
+):
+    """One stage over ``drive``: -> (features [B, K, L·N], carry [B, L, N]).
+
+    The L loops run as batch lanes (lane = b·L + l) through the per-lane
+    mask path, so the Pallas kernel evaluates all B·L loops in ONE launch;
+    the loops-1 shared-mask case is a literal ``generate_states`` call and
+    the loops-1 per-instance case a literal ``generate_channel_states``
+    call — the legacy paths, bitwise.  Feature index l·N + i is loop l's
+    node i, matching the carry's [B, L, N] layout.
+    """
+    b, k = drive.shape
+    per_instance = masks.ndim == 3
+    l, n = masks.shape[-2:]
+    if per_instance and masks.shape[0] != b:
+        raise ValueError(f"per-instance masks {masks.shape} do not match "
+                         f"batch {b}")
+    if stage.input_gain != 1.0:
+        drive = drive * jnp.float32(stage.input_gain)
+    if l == 1:
+        if per_instance:
+            states, s_next = generate_channel_states(
+                stage.model, drive, masks[:, 0], s0=None if s0 is None else s0[:, 0],
+                method=method, block_s=block_s, return_final=True,
+                state_dtype=state_dtype)
+        else:
+            states, s_next = generate_states(
+                stage.model, drive, masks[0], s0=None if s0 is None else s0[:, 0],
+                method=method, block_s=block_s, return_final=True,
+                state_dtype=state_dtype)
+        return states, s_next[:, None, :]
+    # fold loops into lanes: lane b·L + l carries (instance b, loop l)
+    drive_lanes = jnp.repeat(drive, l, axis=0)                    # [B·L, K]
+    masks_lanes = (masks.reshape(b * l, n) if per_instance
+                   else jnp.tile(masks, (b, 1)))                  # [B·L, N]
+    s0_lanes = None if s0 is None else s0.reshape(b * l, n)
+    states, s_next = generate_channel_states(
+        stage.model, drive_lanes, masks_lanes, s0=s0_lanes, method=method,
+        block_s=block_s, return_final=True, state_dtype=state_dtype)
+    features = jnp.moveaxis(states.reshape(b, l, k, n), 1, 2).reshape(b, k, l * n)
+    return features, s_next.reshape(b, l, n)
+
+
+def graph_states(
+    graph: ReservoirGraph,
+    j: jnp.ndarray,          # [B, K] (or [K]) input drive of stage 0
+    masks,                   # tuple of per-stage [L, N] / [B, L, N] stacks
+    *,
+    s0=None,                 # tuple of per-stage [B, L, N] carries
+    method: str = "fast",
+    block_s: int | None = None,
+    return_final: bool = False,
+    state_dtype=None,
+):
+    """Materialized graph evaluation: -> features [B, K, graph.width].
+
+    The *reference oracle* for the composed streaming path (tests,
+    examples, small runs): each stage's full-K state block IS resident
+    here, which is exactly what the streaming fit avoids — use
+    ``pipeline.fit_ridge_streaming_composed`` on the hot path.  Feature
+    columns are the stages in order (stage s occupies
+    ``[offset_s, offset_s + width_s)``); a depth-1/loops-1 graph returns
+    ``generate_states`` output bit for bit.
+
+    ``return_final=True`` adds the per-stage carry tuple — feed it back as
+    ``s0`` to resume the whole chain (the composed train -> test carry).
+    """
+    j = jnp.asarray(j)
+    squeeze = j.ndim == 1
+    if squeeze:
+        j = j[None, :]
+    if len(masks) != graph.depth:
+        raise ValueError(f"expected {graph.depth} stage mask stacks, "
+                         f"got {len(masks)}")
+    feats, carries = [], []
+    drive = j
+    for i, stage in enumerate(graph.stages):
+        f, c = stage_states(stage, drive, masks[i],
+                            None if s0 is None else s0[i],
+                            method=method, block_s=block_s,
+                            state_dtype=state_dtype)
+        feats.append(f)
+        carries.append(c)
+        if i + 1 < graph.depth:
+            drive = stage_link_drive(stage, f)
+    features = feats[0] if graph.depth == 1 else jnp.concatenate(feats, axis=-1)
+    if squeeze:
+        features = features[0]
+        carries = [c[0] for c in carries]
+    return (features, tuple(carries)) if return_final else features

@@ -25,6 +25,31 @@ def nrmse(y_true, y_pred) -> float:
     return float(np.sqrt(np.mean((y_true - y_pred) ** 2) / (var + VAR_EPS)))
 
 
+def memory_capacity_score(y_true, y_pred) -> float:
+    """Linear memory capacity MC = Σ_d r²(y_d, ŷ_d)  (Jaeger 2001).
+
+    ``y_true``/``y_pred`` are [T, D] stacks — channel d the d-step-delayed
+    input u(k − d) and its reconstruction (core/tasks.memory_capacity) —
+    and r² the squared Pearson correlation per delay channel.  Bounded by
+    the number of delay channels D evaluated (and, for a reservoir, by its
+    node count); a channel whose target or prediction is constant
+    contributes 0, not NaN.  This is the capacity metric of the
+    series-coupled-MR and delay-RC characterisation papers
+    (arXiv:2308.15902, arXiv:2101.01664).
+    """
+    y_true = np.asarray(y_true, dtype=np.float64)
+    y_pred = np.asarray(y_pred, dtype=np.float64)
+    if y_true.ndim == 1:
+        y_true, y_pred = y_true[:, None], y_pred[:, None]
+    t = y_true - y_true.mean(axis=0)
+    p = y_pred - y_pred.mean(axis=0)
+    cov = np.sum(t * p, axis=0)
+    denom = np.sum(t * t, axis=0) * np.sum(p * p, axis=0)
+    r2 = np.divide(cov * cov, denom, out=np.zeros_like(cov),
+                   where=denom > 0.0)
+    return float(np.sum(r2))
+
+
 def ser(symbols_true, symbols_pred) -> float:
     """Symbol error rate: fraction of incorrectly reproduced symbols.
 

@@ -266,3 +266,44 @@ class MZISine:
 
 
 NLModel = SiliconMR | SiliconMRLiteral | MackeyGlass | MZISine
+
+
+# ---------------------------------------------------------------------------
+# Inter-stage link nonlinearities (composed reservoir graphs, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+#
+# Deep/cascaded photonic RC (arXiv:2512.10626) passes each layer's output
+# through an on-chip nonlinearity before it drives the next layer — the link
+# is part of the physics, not a free software choice.  A ``ReservoirStage``
+# (core/graph.py) references one of these by *name* so the stage stays a
+# hashable static; each is a pure elementwise map applied to the stage's
+# projected scalar drive.  ``sat`` and ``sin2`` are bounded, which is what
+# keeps a SiliconMR stage downstream of another reservoir inside the [0, 1]
+# drive range the device models were tuned on (serve_dfr normalises its
+# ingest the same way).
+
+
+def link_identity(p: jnp.ndarray) -> jnp.ndarray:
+    """Transparent link: the projected drive passes through unchanged."""
+    return p
+
+
+def link_saturable(p: jnp.ndarray) -> jnp.ndarray:
+    """TPA-style saturable absorber, p / (1 + |p|) — the same saturation
+    shape as SiliconMR's β_tpa drive term.  Monotone, bounded to (−1, 1);
+    non-negative reservoir states map into [0, 1)."""
+    return p / (1.0 + jnp.abs(p))
+
+
+def link_sin2(p: jnp.ndarray) -> jnp.ndarray:
+    """MZI intensity response, sin²(p) — the on-chip nonlinearity of the
+    all-optical cascades.  Bounded to [0, 1]; folds at p = π/2, so it is the
+    stronger (information-losing) choice at large drive."""
+    return jnp.sin(p) ** 2
+
+
+LINK_NONLINEARITIES = {
+    "identity": link_identity,
+    "sat": link_saturable,
+    "sin2": link_sin2,
+}

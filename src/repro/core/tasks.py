@@ -214,6 +214,102 @@ def channel_equalization_drift(
                    name=f"chan_eq_drift_snr{snr_db:g}to{snr_db_after:g}")
 
 
+# ---------------------------------------------------------------------------
+# Memory-capacity task suite (arXiv:2308.15902 / arXiv:2101.01664)
+# ---------------------------------------------------------------------------
+#
+# The composed-reservoir payoff (core/graph.py, DESIGN.md §13) is *memory*,
+# not just regression accuracy — deep chains and series-coupled loops are
+# reported to hold inputs longer than one loop of the same total node count.
+# These canonical characterisation tasks quantify that: linear MC (how many
+# delayed copies of the input the readout can reconstruct), delayed XOR and
+# parity (nonlinear memory — products of delayed bits).  All targets ride
+# the pipeline's [T, C] multi-channel convention, so one vmapped Experiment
+# evaluates every delay channel of every instance in a single jit call and
+# `metrics.memory_capacity_score` reduces the predictions to the MC number.
+
+
+def memory_capacity(
+    n_samples: int = 2400, *, max_delay: int = 40, train_frac: float = 0.5,
+    seed: int = 0,
+) -> Dataset:
+    """Linear memory-capacity probe (Jaeger 2001; arXiv:2308.15902 §IV).
+
+    Input u(k) i.i.d. ~ U[0, 1]; target channel d (of ``max_delay``) is the
+    delayed copy u(k − d), d = 1..max_delay — targets [T, max_delay].  The
+    readout reconstructs every delay simultaneously (one multi-channel
+    ridge fit); MC = Σ_d r²(u(k−d), ŷ_d) over the *test* split
+    (``metrics.memory_capacity_score``).  ``max_delay`` bounds the curve —
+    size it past the memory you expect (MC saturates below it).
+    """
+    if max_delay < 1:
+        raise ValueError(f"max_delay must be >= 1, got {max_delay}")
+    rng = np.random.default_rng(seed)
+    n = n_samples + max_delay
+    u = rng.uniform(0.0, 1.0, size=n)
+    # y[k, d-1] = u[k - d], built on the warm prefix so every row is real
+    y = np.stack([u[max_delay - d : n - d] for d in range(1, max_delay + 1)],
+                 axis=1)
+    u = u[max_delay:]
+    split = int(n_samples * train_frac)
+    return Dataset(u[:split], y[:split], u[split:], y[split:],
+                   name=f"memory_capacity_d{max_delay}")
+
+
+def delayed_xor(
+    n_samples: int = 2400, *, delay: int = 2, train_frac: float = 0.5,
+    seed: int = 0,
+) -> Dataset:
+    """Delayed-XOR probe: y(k) = u(k) XOR u(k − delay), u(k) ∈ {0, 1}.
+
+    XOR is not linearly separable in (u(k), u(k−delay)), so reconstructing
+    it needs *nonlinear* memory — the reservoir must mix the two bits, not
+    just hold them (arXiv:2101.01664's XOR task).  Inputs are the raw bit
+    stream; targets in {0, 1}.
+    """
+    if delay < 1:
+        raise ValueError(f"delay must be >= 1, got {delay}")
+    rng = np.random.default_rng(seed)
+    n = n_samples + delay
+    u = rng.integers(0, 2, size=n).astype(np.float64)
+    y = np.logical_xor(u[delay:] > 0.5, u[:-delay] > 0.5).astype(np.float64)
+    u = u[delay:]
+    split = int(n_samples * train_frac)
+    return Dataset(u[:split], y[:split], u[split:], y[split:],
+                   name=f"delayed_xor_d{delay}")
+
+
+def parity(
+    n_samples: int = 2400, *, order: int = 3, delay: int = 1,
+    train_frac: float = 0.5, seed: int = 0,
+) -> Dataset:
+    """Parity-``order`` probe: y(k) = Π_{m<order} b(k − delay − m), b ∈ {−1, +1}.
+
+    The standard PAR-n nonlinear-memory benchmark: the product of ``order``
+    consecutive ±1 bits starting ``delay`` steps back.  Each extra order
+    multiplies in another delayed bit, so PAR-n needs n-way nonlinear
+    mixing across the delay line.  Inputs are the ±1 bit stream mapped to
+    {0, 1} drive levels ((b + 1)/2 — optical intensities are
+    non-negative); targets stay ±1.
+    """
+    if order < 1:
+        raise ValueError(f"order must be >= 1, got {order}")
+    if delay < 0:
+        raise ValueError(f"delay must be >= 0, got {delay}")
+    rng = np.random.default_rng(seed)
+    warm = delay + order
+    n = n_samples + warm
+    b = rng.choice([-1.0, 1.0], size=n)
+    y = np.ones(n)
+    for m in range(order):
+        y *= np.roll(b, delay + m)
+    u = (b + 1.0) / 2.0
+    u, y = u[warm:], y[warm:]
+    split = int(n_samples * train_frac)
+    return Dataset(u[:split], y[:split], u[split:], y[split:],
+                   name=f"parity_{order}_d{delay}")
+
+
 def quantize_symbols(y: np.ndarray) -> np.ndarray:
     """Map regression outputs to the nearest 4-PAM symbol."""
     y = np.asarray(y)

@@ -5,9 +5,11 @@ readout solve and the streaming (chunk-scan) fits."""
 
 from .experiment import (Experiment, ExperimentConfig, ExperimentResult,
                          WDMExperiment, channel_states)
-from .ridge import (apply_readout, fit_ridge, fit_ridge_batched,
-                    fit_ridge_streaming, fit_ridge_streaming_wdm, gram,
-                    solve_gcv, solve_gcv_svd, with_bias)
+from .ridge import (apply_readout, composed_chunk_states_fn, fit_ridge,
+                    fit_ridge_batched, fit_ridge_streaming,
+                    fit_ridge_streaming_composed, fit_ridge_streaming_shared,
+                    fit_ridge_streaming_wdm, gram, solve_gcv, solve_gcv_svd,
+                    with_bias)
 from .session import (SessionConfig, SessionState, session_init,
                       session_predict, session_reset, session_solve,
                       session_step, session_update)
@@ -21,9 +23,12 @@ __all__ = [
     "WDMExperiment",
     "apply_readout",
     "channel_states",
+    "composed_chunk_states_fn",
     "fit_ridge",
     "fit_ridge_batched",
     "fit_ridge_streaming",
+    "fit_ridge_streaming_composed",
+    "fit_ridge_streaming_shared",
     "fit_ridge_streaming_wdm",
     "gram",
     "session_init",

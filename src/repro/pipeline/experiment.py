@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.graph import ReservoirGraph, ReservoirStage, build_stage_masks
 from repro.core.masking import make_mask, sample_and_hold
 from repro.core.metrics import VAR_EPS
 from repro.core.nonlinear import NLModel, SiliconMR
@@ -49,8 +50,10 @@ from repro.core.reservoir import generate_channel_states, generate_states
 from repro.core.tasks import SYMBOLS
 from repro.parallel.sharding import maybe_shard
 
-from .ridge import (apply_readout, fit_ridge_batched, fit_ridge_streaming,
-                    fit_ridge_streaming_wdm, with_bias)
+from .ridge import (apply_readout, composed_chunk_states_fn, fit_ridge_batched,
+                    fit_ridge_streaming, fit_ridge_streaming_composed,
+                    fit_ridge_streaming_shared, fit_ridge_streaming_wdm,
+                    with_bias)
 
 _SYMBOLS = tuple(float(s) for s in SYMBOLS)
 
@@ -112,10 +115,33 @@ class ExperimentConfig:
     #   readout_block_t — ridge_gram T tile (sublane-aligned internally).
     kernel_block_s: int | None = None
     readout_block_t: int = 512
+    # Composed reservoir graph (DESIGN.md §13): a core.graph.ReservoirGraph
+    # (or a single ReservoirStage, auto-chained) replaces the single delay
+    # loop — deep/cascaded stages and multi-loop stages run as a per-chunk
+    # stage chain inside the streaming scans, readout features the
+    # concatenation of every stage's nodes (width = topology.width).  The
+    # composed path is streaming-ONLY (requires ``stream_chunk_k``): chunk
+    # chaining is what keeps every stage at O(B·chunk·L·N) instead of a
+    # full-T block per stage, and the materialized fallback would defeat
+    # exactly that.  ``n_nodes``/``mask_seed``/``mask_levels`` are ignored in
+    # favour of the per-stage settings; a depth-1/loops-1 topology reproduces
+    # the legacy single-reservoir fit bit for bit.
+    topology: ReservoirGraph | None = None
 
     def __post_init__(self):
         if not isinstance(self.ridge_l2, tuple):
             object.__setattr__(self, "ridge_l2", _as_tuple(self.ridge_l2))
+        if isinstance(self.topology, ReservoirStage):
+            object.__setattr__(self, "topology",
+                               ReservoirGraph(stages=(self.topology,)))
+        if self.topology is not None:
+            if not isinstance(self.topology, ReservoirGraph):
+                raise TypeError(f"topology must be a ReservoirGraph or "
+                                f"ReservoirStage, got {self.topology!r}")
+            if self.stream_chunk_k is None:
+                raise ValueError(
+                    "a composed topology runs streaming-only (per-chunk stage "
+                    "chaining is its memory contract); set stream_chunk_k")
         if self.state_noise_mode not in ("sampled", "diagonal"):
             raise ValueError(f"unknown state_noise_mode {self.state_noise_mode!r}")
         if self.stream_state_dtype not in ("float32", "bfloat16"):
@@ -238,7 +264,7 @@ def _gen_states(cfg: ExperimentConfig, mask, j, *, wdm: bool, s0=None,
 
 
 def _eval_streaming(cfg: ExperimentConfig, mask, j_te, te_tg3, w_fit, s0, *,
-                    wdm: bool = False):
+                    wdm: bool = False, states_fn=None):
     """Chunked test evaluation: states per chunk, running error accumulators.
 
     ``te_tg3`` [B, T, C].  Returns (y_raw [B, T, C] or None, acc) where acc
@@ -251,14 +277,21 @@ def _eval_streaming(cfg: ExperimentConfig, mask, j_te, te_tg3, w_fit, s0, *,
     ``cfg.collect_y_pred=False`` the per-chunk predictions are consumed by
     the accumulators and dropped — the scan stacks nothing, so the O(B·T·C)
     prediction block never exists either (metrics-only mode).
+
+    ``states_fn`` overrides the per-chunk state producer (a ``(j_chunk,
+    carry) -> (features, carry')`` transformer; ``s0`` then a matching carry
+    pytree) — the composed-graph and shared-readout paths pass theirs so
+    test evaluation traces the exact stage ops the fit traced; ``None``
+    keeps the legacy mask/``wdm`` path with identical traced ops.
     """
     from .ridge import _chunk_axis, _chunk_layout
 
-    b, t_total = j_te.shape
+    b, t_total = j_te.shape[0], j_te.shape[1]
     c_cols = te_tg3.shape[-1]
     chunk_k = cfg.stream_chunk_k
     n_chunks, t_padded = _chunk_layout(t_total, chunk_k)
-    jp = jnp.pad(j_te, ((0, 0), (0, t_padded - t_total)))
+    jp = jnp.pad(j_te, ((0, 0), (0, t_padded - t_total))
+                 + ((0, 0),) * (j_te.ndim - 2))
     yp = jnp.pad(te_tg3, ((0, 0), (0, t_padded - t_total), (0, 0)))
 
     # Variance accumulators are *shifted* by the stream's first sample: the
@@ -267,7 +300,7 @@ def _eval_streaming(cfg: ExperimentConfig, mask, j_te, te_tg3, w_fit, s0, *,
     # applied to d = y − y[0] the cancellation is against ~std², not mean².
     # y[0] is one [B, C] gather, not a full-stream pass.
     shift = te_tg3[:, 0, :]                          # [B, C]
-    carry0 = (jnp.asarray(s0, jnp.float32),
+    carry0 = (jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), s0),
               jnp.zeros((b, c_cols), jnp.float32),   # Σ (ŷ − y)²
               jnp.zeros((b,), jnp.float32),          # symbol mismatches
               jnp.zeros((b, c_cols), jnp.float32),   # Σ (y − y₀)
@@ -279,9 +312,12 @@ def _eval_streaming(cfg: ExperimentConfig, mask, j_te, te_tg3, w_fit, s0, *,
     def body(carry, chunk):
         s, err2, ser_cnt, y_sum, y_sq = carry
         j_c, y_c, t_start = chunk
-        states, s = _gen_states(cfg, mask, j_c, wdm=wdm, s0=s,
-                                return_final=True,
-                                state_dtype=cfg._stream_state_dtype_arg)
+        if states_fn is not None:
+            states, s = states_fn(j_c, s)
+        else:
+            states, s = _gen_states(cfg, mask, j_c, wdm=wdm, s0=s,
+                                    return_final=True,
+                                    state_dtype=cfg._stream_state_dtype_arg)
         y_hat = jnp.einsum("btf,bfc->btc", with_bias(states), w_fit,
                            preferred_element_type=jnp.float32)
         tidx = t_start + jnp.arange(chunk_k, dtype=jnp.int32)
@@ -318,9 +354,9 @@ def _streaming_metrics(acc, t_test: int, *, channel_axis: bool):
     return nrmse, ser
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "wdm"))
+@functools.partial(jax.jit, static_argnames=("cfg", "wdm", "shared"))
 def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg,
-                  wdm: bool = False):
+                  wdm: bool = False, shared: bool = False):
     """The whole experiment as one XLA program.  All arrays [B, T*].
 
     ``wdm=True`` runs the WDM ensemble workload: the batch axis is R
@@ -329,6 +365,13 @@ def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg,
     one Pallas launch for all channels) and the streamed fit to
     ``fit_ridge_streaming_wdm``; everything else (input layer, readout
     solve, metrics) is the same program.
+
+    ``shared=True`` (with ``wdm=True``) is the shared-readout WDM mode:
+    ONE readout over the concatenation of all R channels' states
+    (``fit_ridge_streaming_shared``), targets [1, K(, C)] — one task for
+    the ensemble.  ``cfg.topology`` switches the streaming branch onto the
+    composed stage-chain fit/eval (``mask`` then the per-stage mask-stack
+    tuple); both are streaming-only (enforced at config construction).
     """
     # -- input layer: per-instance normalisation + sample-and-hold + gain ----
     if cfg.normalize_input:
@@ -342,21 +385,56 @@ def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg,
     j_te = maybe_shard(j_te, ("pod", "data"))
 
     if cfg.stream_chunk_k is not None:
-        # -- streaming fused path (DESIGN.md §8/§9): reservoir chunks feed
-        # the accumulate-into Gram kernel inside ONE lax.scan; test
+        # -- streaming fused path (DESIGN.md §8/§9/§13): reservoir chunks
+        # feed the accumulate-into Gram kernel inside ONE lax.scan; test
         # evaluation streams too.  The [B, T, N] state tensor never exists.
-        fit = fit_ridge_streaming_wdm if wdm else fit_ridge_streaming
-        w_fit, lam_idx, s_carry = fit(
-            cfg.model, mask, j_tr, tr_tg, washout=cfg.washout,
-            chunk_k=cfg.stream_chunk_k, lambdas=cfg.ridge_l2,
-            state_method=cfg.state_method, block_s=cfg.kernel_block_s,
-            use_kernel=cfg.readout_use_kernel, block_t=cfg.readout_block_t,
-            state_dtype=cfg._stream_state_dtype_arg,
-            noise_rel=(cfg.state_noise_rel
-                       if cfg.state_noise_mode == "diagonal" else 0.0))
+        noise_rel = (cfg.state_noise_rel
+                     if cfg.state_noise_mode == "diagonal" else 0.0)
+        kw = dict(washout=cfg.washout, chunk_k=cfg.stream_chunk_k,
+                  lambdas=cfg.ridge_l2, state_method=cfg.state_method,
+                  block_s=cfg.kernel_block_s,
+                  use_kernel=cfg.readout_use_kernel,
+                  block_t=cfg.readout_block_t,
+                  state_dtype=cfg._stream_state_dtype_arg,
+                  noise_rel=noise_rel)
         te_tg3 = te_tg[..., None] if te_tg.ndim == 2 else te_tg
-        y_raw3, acc = _eval_streaming(cfg, mask, j_te, te_tg3,
-                                      w_fit, s_carry, wdm=wdm)
+        if cfg.topology is not None:
+            # composed stage chain: fit and eval share ONE per-chunk
+            # transformer, so test states trace the exact stage ops the
+            # Gram accumulation saw (pipeline/ridge.composed_chunk_states_fn)
+            w_fit, lam_idx, s_carry = fit_ridge_streaming_composed(
+                cfg.topology, mask, j_tr, tr_tg, **kw)
+            eval_fn = composed_chunk_states_fn(
+                cfg.topology, mask, state_method=cfg.state_method,
+                block_s=cfg.kernel_block_s,
+                state_dtype=cfg._stream_state_dtype_arg)
+            y_raw3, acc = _eval_streaming(cfg, mask, j_te, te_tg3,
+                                          w_fit, s_carry, states_fn=eval_fn)
+        elif shared:
+            # shared-readout WDM: one [R·N + 1] readout, channel axis rides
+            # the chunk scan as a trailing input dim (B = 1 for the Gram)
+            r, n_nodes = mask.shape
+            w_1, lam_1, s_1 = fit_ridge_streaming_shared(
+                cfg.model, mask, j_tr, tr_tg[0], **kw)
+            w_fit, lam_idx = w_1[None], lam_1[None]
+
+            def eval_fn(j_c, carries):         # j_c [1, chunk, R]
+                states, s_next = _gen_states(
+                    cfg, mask, j_c[0].T, wdm=True, s0=carries[0][0],
+                    return_final=True,
+                    state_dtype=cfg._stream_state_dtype_arg)
+                feats = jnp.moveaxis(states, 0, 1).reshape(
+                    j_c.shape[1], r * n_nodes)[None]
+                return feats, (s_next[None],)
+
+            y_raw3, acc = _eval_streaming(
+                cfg, mask, jnp.moveaxis(j_te, 0, 1)[None], te_tg3,
+                w_fit, (s_1[None],), states_fn=eval_fn)
+        else:
+            fit = fit_ridge_streaming_wdm if wdm else fit_ridge_streaming
+            w_fit, lam_idx, s_carry = fit(cfg.model, mask, j_tr, tr_tg, **kw)
+            y_raw3, acc = _eval_streaming(cfg, mask, j_te, te_tg3,
+                                          w_fit, s_carry, wdm=wdm)
         nrmse, ser = _streaming_metrics(acc, te_tg3.shape[1],
                                         channel_axis=te_tg.ndim == 3)
         lam = jnp.asarray(cfg.ridge_l2, jnp.float32)[lam_idx]
@@ -436,8 +514,12 @@ class Experiment:
 
     def __init__(self, config: ExperimentConfig):
         self.config = config
-        self.mask = make_mask(config.n_nodes, levels=config.mask_levels,
-                              seed=config.mask_seed)
+        if config.topology is not None:
+            # per-stage mask stacks (tuple of [L, N]) replace the single mask
+            self.mask = build_stage_masks(config.topology)
+        else:
+            self.mask = make_mask(config.n_nodes, levels=config.mask_levels,
+                                  seed=config.mask_seed)
 
     def run(self, inputs_train, targets_train, inputs_test, targets_test) -> ExperimentResult:
         """Fit readouts and evaluate, one task instance per batch row.
@@ -518,14 +600,45 @@ class WDMExperiment:
 
     Channel masks default to ``make_mask(n_nodes, seed=mask_seed + r)``;
     pass ``masks`` [R, N] to override.
+
+    ``shared_readout=True`` switches to the shared-readout mode (DESIGN.md
+    §13): the R channels observe ONE task (targets [K(, C)], one stream for
+    the ensemble, inputs still [R, K] — e.g. R delayed/transformed views of
+    one signal) and the fit trains a single [R·N + 1] readout over the
+    concatenation of every channel's states, whose Gram carries the
+    cross-channel correlation blocks the per-channel fits discard
+    (``fit_ridge_streaming_shared``).  Result arrays are then ensemble-level
+    (B = 1): ``nrmse``/``ser``/``lam`` [1], ``readout_w`` [1, R·N + 1(, C)].
+    Streaming-only, like every composed mode.
+
+    ``config.topology`` (per-channel composed graphs) builds per-stage
+    [R, L, N] mask stacks — channel r, loop l seeded ``mask_seed + r·L + l``
+    — and runs the composed streaming fit with channels as instances.
     """
 
     def __init__(self, config: ExperimentConfig, n_channels: int, *,
-                 masks: jnp.ndarray | None = None):
+                 masks: jnp.ndarray | None = None,
+                 shared_readout: bool = False):
         if n_channels < 1:
             raise ValueError(f"n_channels must be >= 1, got {n_channels}")
         self.config = config
         self.n_channels = n_channels
+        self.shared_readout = shared_readout
+        if shared_readout and config.stream_chunk_k is None:
+            raise ValueError(
+                "shared_readout accumulates ONE cross-channel Gram on the "
+                "streaming path; set stream_chunk_k")
+        if shared_readout and config.topology is not None:
+            raise ValueError(
+                "shared_readout with a composed topology is not supported; "
+                "pick one readout generalisation per run")
+        if config.topology is not None:
+            if masks is not None:
+                raise ValueError("with config.topology the per-stage mask "
+                                 "stacks are derived; masks= is not accepted")
+            self.masks = build_stage_masks(config.topology,
+                                           channels=n_channels)
+            return
         if masks is None:
             masks = jnp.stack([
                 make_mask(config.n_nodes, levels=config.mask_levels,
@@ -545,20 +658,29 @@ class WDMExperiment:
         Inputs are [R, K] (R = ``n_channels``); targets may carry a trailing
         output-channel axis ([R, K, C]).  Result arrays are per wavelength
         channel: ``nrmse``/``ser``/``lam`` [R], ``readout_w`` [R, N + 1(, C)].
+        With ``shared_readout=True`` targets are ONE stream ([K] or [K, C])
+        and results are ensemble-level (see class docstring).
         """
         tr_in = _canon_batch(inputs_train, "inputs_train")
         te_in = _canon_batch(inputs_test, "inputs_test")
-        tr_tg = _canon_targets(targets_train, "targets_train", tr_in)
-        te_tg = _canon_targets(targets_test, "targets_test", te_in)
         if tr_in.shape[0] != self.n_channels or te_in.shape[0] != self.n_channels:
             raise ValueError(
                 f"expected {self.n_channels} channel rows, got train "
                 f"{tr_in.shape} / test {te_in.shape}")
+        if self.shared_readout:
+            # one target stream for the whole ensemble -> canon against a
+            # B = 1 view of the stream length
+            tr_tg = _canon_targets(targets_train, "targets_train", tr_in[:1])
+            te_tg = _canon_targets(targets_test, "targets_test", te_in[:1])
+        else:
+            tr_tg = _canon_targets(targets_train, "targets_train", tr_in)
+            te_tg = _canon_targets(targets_test, "targets_test", te_in)
         if tr_tg.ndim != te_tg.ndim or (
                 tr_tg.ndim == 3 and tr_tg.shape[-1] != te_tg.shape[-1]):
             raise ValueError(
                 f"inconsistent target shapes: train {tr_tg.shape}, "
                 f"test {te_tg.shape}")
         y, nrmse, ser, lam, w = _run_pipeline(
-            self.config, self.masks, tr_in, tr_tg, te_in, te_tg, wdm=True)
+            self.config, self.masks, tr_in, tr_tg, te_in, te_tg, wdm=True,
+            shared=self.shared_readout)
         return _pack_result(y, nrmse, ser, lam, w)

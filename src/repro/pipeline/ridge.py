@@ -38,6 +38,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.graph import ReservoirGraph, stage_link_drive, stage_states
 from repro.core.reservoir import generate_channel_states, generate_states
 from repro.parallel.sharding import maybe_shard
 
@@ -337,9 +338,9 @@ def _fold_chunk(plan: _FoldPlan, g, cvec, y2, x, yv, *, forgetting: float = 1.0)
 
 
 def _fit_streaming_core(
-    states_fn,             # (j_chunk [B, chunk], s [B, N] f32) -> (states, s_next)
-    n: int,                # nodes per instance/channel
-    j: jnp.ndarray,        # [B, K] canonicalised stream
+    states_fn,             # (j_chunk [B, chunk, ...], carry f32) -> (states, carry')
+    n: int,                # feature nodes per instance (graph width)
+    j: jnp.ndarray,        # [B, K] (or [B, K, ...]) canonicalised stream
     y: jnp.ndarray,        # [B, K, C] canonicalised targets
     *,
     washout: int,
@@ -350,8 +351,9 @@ def _fit_streaming_core(
     block_f: int,
     noise_rel: float,
     state_dtype,
-    s0: jnp.ndarray | None,
+    s0,                    # carry pytree matching states_fn (None = dark)
     forgetting: float = 1.0,
+    carry_layout: tuple[tuple[int, int], ...] | None = None,
 ):
     """The shared chunk-scan of both streaming fits (DESIGN.md §8/§9/§10).
 
@@ -374,8 +376,17 @@ def _fit_streaming_core(
     before the chunk accumulates, and the GCV solve sees the *effective*
     (decayed) sample count instead of T_fit.  λ = 1.0 adds no ops — the
     historical path, pinned bitwise by tests/test_serving.py.
+
+    ``carry_layout`` generalises the reservoir carry from one [B, N] array to
+    a pytree (DESIGN.md §13): a tuple of per-stage (L, N_s) entries declares
+    the carry a matching tuple of [B, L, N_s] leaves AND how a feature row
+    [B, n] slices back into per-stage carries (stage s occupies columns
+    [Σ_{<s} L·N, …), loop-major within the stage) — which is what the
+    mid-stream s_end extraction needs when the last real period is not at a
+    chunk end.  ``None`` keeps the legacy single-array carry with identical
+    traced ops, so existing fits stay bitwise.
     """
-    b, k_total = j.shape
+    b, k_total = j.shape[0], j.shape[1]
     f = n + 1
     c_cols = y.shape[-1]
     if k_total <= washout:
@@ -392,20 +403,43 @@ def _fit_streaming_core(
                       block_f=block_f, state_dtype=state_dtype)
     fq = plan.fq
 
-    jp = jnp.pad(j, ((0, 0), (0, k_padded - k_total)))
+    jp = jnp.pad(j, ((0, 0), (0, k_padded - k_total))
+                 + ((0, 0),) * (j.ndim - 2))
     yp = jnp.pad(y, ((0, 0), (0, k_padded - k_total), (0, 0)))
-    if s0 is None:
-        s0 = jnp.zeros((b, n), jnp.float32)
+    if carry_layout is None:
+        if s0 is None:
+            s0 = jnp.zeros((b, n), jnp.float32)
+        res0 = jnp.asarray(s0, jnp.float32)
+
+        def carry_from_row(row):   # [B, n] f32 feature row IS the carry
+            return row
+    else:
+        if s0 is None:
+            s0 = tuple(jnp.zeros((b, lp, w), jnp.float32)
+                       for lp, w in carry_layout)
+        res0 = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), tuple(s0))
+        offs, off = [], 0
+        for lp, w in carry_layout:
+            offs.append(off)
+            off += lp * w
+        if off != n:
+            raise ValueError(f"carry_layout covers {off} features, expected {n}")
+
+        def carry_from_row(row):   # [B, n] f32 -> tuple of [B, L, N_s]
+            return tuple(
+                jax.lax.dynamic_slice_in_dim(row, o, lp * w, axis=1)
+                .reshape(b, lp, w)
+                for o, (lp, w) in zip(offs, carry_layout))
 
     carry0 = (
-        jnp.asarray(s0, jnp.float32),          # running reservoir state
+        res0,                                  # running reservoir carry
         jnp.zeros((b, fq, fq), jnp.float32),   # G (feature-padded on kernel path)
         jnp.zeros((b, fq, c_cols), jnp.float32),
         jnp.zeros((b,), jnp.float32),          # ‖y‖² over the fit window
         jnp.zeros((b,), jnp.float32),          # Σ s   (noise σ estimate)
         jnp.zeros((b,), jnp.float32),          # Σ s²
         jnp.zeros((b,), jnp.float32),          # effective (decayed) samples
-        jnp.asarray(s0, jnp.float32),          # state after period K - 1
+        res0,                                  # carry after period K - 1
     )
     xs = (_chunk_axis(jp, n_chunks, chunk_k),
           _chunk_axis(yp, n_chunks, chunk_k),
@@ -442,10 +476,13 @@ def _fit_streaming_core(
         in_chunk = (k_start <= k_total - 1) & (k_total - 1 < k_start + chunk_k)
         at_chunk_end = k_total - 1 == k_start + chunk_k - 1
         last_local = jnp.clip(k_total - 1 - k_start, 0, chunk_k - 1)
-        s_k = jax.lax.dynamic_index_in_dim(states, last_local, axis=1,
+        row = jax.lax.dynamic_index_in_dim(states, last_local, axis=1,
                                            keepdims=False).astype(jnp.float32)
-        s_k = jnp.where(at_chunk_end, s_next, s_k)
-        s_end = jnp.where(in_chunk, s_k, s_end)
+        s_k = carry_from_row(row)
+        s_k = jax.tree.map(lambda nxt, sk: jnp.where(at_chunk_end, nxt, sk),
+                           s_next, s_k)
+        s_end = jax.tree.map(lambda sk, se: jnp.where(in_chunk, sk, se),
+                             s_k, s_end)
         return (s_next, g, cvec, y2, ssum, ssq, tcnt, s_end), None
 
     (s_last, g, cvec, y2, ssum, ssq, tcnt, s_end), _ = jax.lax.scan(
@@ -617,3 +654,181 @@ def fit_ridge_streaming_wdm(
         chunk_k=chunk_k, lambdas=lambdas, use_kernel=use_kernel,
         block_t=block_t, block_f=block_f, noise_rel=noise_rel,
         state_dtype=state_dtype, s0=s0, forgetting=forgetting)
+
+
+def composed_chunk_states_fn(graph: ReservoirGraph, masks, *,
+                             state_method: str = "kernel",
+                             block_s: int | None = None,
+                             state_dtype=None):
+    """The per-chunk transformer of a reservoir graph (DESIGN.md §13).
+
+    Returns ``states_fn(j_chunk [B, chunk], carries) -> (features
+    [B, chunk, graph.width], carries')`` with ``carries`` a tuple of
+    per-stage [B, L, N_s] f32 arrays (``graph.carry_layout``): each stage
+    runs over the *chunk* (loops folded into batch lanes — one Pallas launch
+    per stage), its linked drive feeds the next stage inside the SAME scan
+    step, and only chunk-sized feature blocks ever exist — no stage
+    materialises a full-K [B, K, L·N] tensor.  Shared between the composed
+    streaming fit below and the composed streaming eval
+    (pipeline/experiment.py), so train and test trace identical stage ops.
+    """
+    masks = tuple(masks)
+    if len(masks) != graph.depth:
+        raise ValueError(f"expected {graph.depth} stage mask stacks, "
+                         f"got {len(masks)}")
+    depth = graph.depth
+
+    def states_fn(j_c, carries):
+        feats, new_c = [], []
+        drive = j_c
+        for i, stage in enumerate(graph.stages):
+            f_i, c_i = stage_states(stage, drive, masks[i], carries[i],
+                                    method=state_method, block_s=block_s,
+                                    state_dtype=state_dtype)
+            feats.append(f_i)
+            new_c.append(c_i)
+            if i + 1 < depth:
+                drive = stage_link_drive(stage, f_i)
+        states = feats[0] if depth == 1 else jnp.concatenate(feats, axis=-1)
+        return states, tuple(new_c)
+
+    return states_fn
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "graph", "washout", "chunk_k", "lambdas", "state_method", "block_s",
+    "use_kernel", "block_t", "block_f", "noise_rel", "state_dtype",
+    "forgetting"))
+def fit_ridge_streaming_composed(
+    graph: ReservoirGraph,
+    masks,                 # tuple of per-stage [L, N] / [B, L, N] mask stacks
+    j: jnp.ndarray,        # [B, K] stage-0 sample-and-held input stream
+    targets: jnp.ndarray,  # [B, K] or [B, K, C]
+    *,
+    washout: int,
+    chunk_k: int,
+    lambdas: tuple[float, ...] = (1e-6,),
+    state_method: str = "kernel",
+    block_s: int | None = None,
+    use_kernel: bool = True,
+    block_t: int = 512,
+    block_f: int = 128,
+    noise_rel: float = 0.0,
+    state_dtype=None,
+    s0=None,               # tuple of per-stage [B, L, N] carries
+    forgetting: float = 1.0,
+):
+    """Streaming readout fit over a composed reservoir graph (DESIGN.md §13).
+
+    The ``fit_ridge_streaming`` chunk scan with the whole stage *chain* in
+    the driver's seat: each scan step runs every stage over the chunk
+    (stage k + 1 driven by stage k's linked output, computed in-step), folds
+    the concatenated [B, chunk, graph.width] feature block into per-instance
+    Gram stacks, and carries the per-stage reservoir states as a tuple —
+    threaded independently, so the chain resumes bit-exactly at any chunk
+    split.  Peak live state memory is O(B·chunk·width); no stage ever holds
+    a full-K block (``repro.analysis`` NoStateTensor pins this per stage).
+
+    A depth-1/loops-1 graph is the legacy fit, bit for bit: the stage calls
+    ``generate_states`` literally and the single-element concat is skipped,
+    so ``w``/``lam_idx`` match ``fit_ridge_streaming`` bitwise (the carry
+    just gains the [B, 1, N] stage axis).  Knob semantics (``noise_rel``,
+    ``state_dtype``, ``forgetting``, kernel/einsum Gram) are inherited
+    unchanged from ``fit_ridge_streaming``.
+
+    Returns ``(w [B, F, C], lam_idx [B], s_end)`` with F = graph.width + 1
+    and ``s_end`` the per-stage carry tuple after period K - 1 — feed it to
+    the composed eval (or back in as ``s0``) as the train -> test carry.
+    """
+    j, y = _canon_stream(j, targets)
+    states_fn = composed_chunk_states_fn(graph, masks,
+                                         state_method=state_method,
+                                         block_s=block_s,
+                                         state_dtype=state_dtype)
+    return _fit_streaming_core(
+        states_fn, graph.width, j, y, washout=washout, chunk_k=chunk_k,
+        lambdas=lambdas, use_kernel=use_kernel, block_t=block_t,
+        block_f=block_f, noise_rel=noise_rel, state_dtype=state_dtype,
+        s0=None if s0 is None else tuple(s0), forgetting=forgetting,
+        carry_layout=graph.carry_layout)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "model", "washout", "chunk_k", "lambdas", "state_method", "block_s",
+    "use_kernel", "block_t", "block_f", "noise_rel", "state_dtype",
+    "forgetting"))
+def fit_ridge_streaming_shared(
+    model,
+    masks: jnp.ndarray,    # [R, N] — one MLS mask per wavelength channel
+    j: jnp.ndarray,        # [R, K] — one sample-and-held stream per channel
+    targets: jnp.ndarray,  # [K] or [K, C] — ONE target for the ensemble
+    *,
+    washout: int,
+    chunk_k: int,
+    lambdas: tuple[float, ...] = (1e-6,),
+    state_method: str = "kernel",
+    block_s: int | None = None,
+    use_kernel: bool = True,
+    block_t: int = 512,
+    block_f: int = 128,
+    noise_rel: float = 0.0,
+    state_dtype=None,
+    s0: jnp.ndarray | None = None,  # [R, N]
+    forgetting: float = 1.0,
+):
+    """Shared-readout WDM fit: ONE readout over all R channels' features.
+
+    ``fit_ridge_streaming_wdm`` trains R independent readouts — R separate
+    [F, F] Grams, each channel predicting its own target.  Here the R
+    channels are treated as ONE wide reservoir observing one task: per
+    period the readout sees the concatenation of every channel's N node
+    states (feature r·N + i = channel r, node i), so the single Gram is
+    [R·N + 1, R·N + 1] and its off-diagonal blocks carry the *cross-channel*
+    state correlations the per-channel fits discard.  This is the
+    series/parallel-coupled-MR readout of arXiv:2308.15902 mapped onto the
+    WDM hardware: same photonic ensemble, richer (and R× larger) linear
+    readout, one target stream.
+
+    Streaming shape: the channel axis rides the chunk scan as a trailing
+    input dim (stream [1, K, R]), each chunk runs all R channels as ONE
+    per-lane-mask kernel launch, and the features fold into a single Gram —
+    peak state memory O(R·chunk·N), the [K, R·N] feature matrix never
+    resident.  Carry layout is one ((R, N),) entry, so mid-chunk s_end
+    extraction reshapes a feature row back to [R, N] per channel.
+
+    Returns ``(w [F, C], lam_idx, s_end [R, N])`` — one weight vector and
+    one λ for the whole ensemble, per-channel train -> test carry.
+    """
+    masks = jnp.asarray(masks)
+    if masks.ndim != 2:
+        raise ValueError(f"masks must be [R, N], got {masks.shape}")
+    r, n_nodes = masks.shape
+    j = jnp.asarray(j, jnp.float32)
+    if j.ndim != 2 or j.shape[0] != r:
+        raise ValueError(f"channels mismatch: j {j.shape} vs masks {masks.shape}")
+    y = jnp.asarray(targets, jnp.float32)
+    if y.ndim == 1:
+        y = y[:, None]
+    if y.ndim != 2 or y.shape[0] != j.shape[1]:
+        raise ValueError(f"targets {y.shape} do not match stream length "
+                         f"{j.shape[1]}")
+    j_core = jnp.moveaxis(j, 0, 1)[None]       # [1, K, R]
+    y_core = y[None]                           # [1, K, C]
+
+    def states_fn(j_c, carries):               # j_c [1, chunk, R]
+        s = carries[0]                         # [1, R, N]
+        states, s_next = generate_channel_states(
+            model, j_c[0].T, masks, s0=s[0], method=state_method,
+            block_s=block_s, return_final=True, state_dtype=state_dtype)
+        feats = jnp.moveaxis(states, 0, 1).reshape(
+            j_c.shape[1], r * n_nodes)[None]   # [1, chunk, R·N]
+        return feats, (s_next[None],)
+
+    w, idx, s_end = _fit_streaming_core(
+        states_fn, r * n_nodes, j_core, y_core, washout=washout,
+        chunk_k=chunk_k, lambdas=lambdas, use_kernel=use_kernel,
+        block_t=block_t, block_f=block_f, noise_rel=noise_rel,
+        state_dtype=state_dtype,
+        s0=None if s0 is None else (jnp.asarray(s0, jnp.float32)[None],),
+        forgetting=forgetting, carry_layout=((r, n_nodes),))
+    return w[0], idx[0], s_end[0][0]

@@ -1,0 +1,372 @@
+"""Composable reservoir graphs (DESIGN.md §13).
+
+Pins the contracts of the composed-topology machinery:
+
+* **depth-1 is the legacy reservoir, bit for bit** — a depth-1/loops-1
+  graph's states, streamed fit and Experiment run reproduce the single-mask
+  path exactly, on every state method;
+* **per-stage carries resume bit-exactly** — chunking the composed chain at
+  ANY split replays the uninterrupted arithmetic (the hypothesis property in
+  tests/test_properties.py generalises the fixed points here);
+* **shared-readout WDM** agrees with the materialized concat-feature Gram
+  fit, and reduces to the per-channel fit at R = 1;
+* **no stage materialises a full-T block** on the streamed path (the jaxpr
+  contract the repro.analysis entry points gate in CI).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.analysis import NoStateTensor, Program, check_rules
+from repro.core import (ReservoirGraph, ReservoirStage, SiliconMR,
+                        build_stage_masks, chain, generate_channel_states,
+                        generate_states, graph_states, make_mask, tasks)
+from repro.core.graph import stage_link_drive, stage_states
+from repro.pipeline import (Experiment, ExperimentConfig, WDMExperiment,
+                            fit_ridge, fit_ridge_batched, fit_ridge_streaming,
+                            fit_ridge_streaming_composed,
+                            fit_ridge_streaming_shared,
+                            fit_ridge_streaming_wdm)
+
+MODEL = SiliconMR()
+LAMS = (1e-6, 1e-4)
+B, K, N, W0, CHUNK = 3, 90, 12, 10, 32   # K % CHUNK != 0: ragged tail
+
+
+def _stream(seed, b=B, k=K):
+    rng = np.random.default_rng(seed)
+    j = jnp.asarray(rng.uniform(0.05, 0.95, (b, k)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((b, k)), jnp.float32)
+    return j, y
+
+
+def _graph2():
+    """Depth-2 chain with a multi-loop first stage (width 2·12 + 7 = 31)."""
+    return chain(
+        ReservoirStage(model=MODEL, n_nodes=N, loops=2, mask_seed=3),
+        ReservoirStage(model=MODEL, n_nodes=7, mask_seed=11, link="sin2"))
+
+
+# ---------------------------------------------------------------------------
+# Graph construction and validation
+# ---------------------------------------------------------------------------
+
+
+def test_graph_shapes_and_layout():
+    g = _graph2()
+    assert g.depth == 2 and g.width == 2 * N + 7
+    assert g.carry_layout == ((2, N), (1, 7))
+    masks = build_stage_masks(g)
+    assert masks[0].shape == (2, N) and masks[1].shape == (1, 7)
+    # loop masks are distinct phases of the seed ladder
+    assert not np.array_equal(np.asarray(masks[0][0]), np.asarray(masks[0][1]))
+    np.testing.assert_array_equal(np.asarray(masks[0][0]),
+                                  np.asarray(make_mask(N, seed=3)))
+
+
+def test_graph_validation():
+    with pytest.raises(ValueError, match="at least one stage"):
+        ReservoirGraph(stages=())
+    with pytest.raises(ValueError, match="loops"):
+        ReservoirStage(loops=0)
+    with pytest.raises(ValueError, match="unknown link"):
+        ReservoirStage(link="tanh")
+    with pytest.raises(ValueError, match="stage mask stacks"):
+        graph_states(_graph2(), jnp.zeros((B, K)), (jnp.zeros((2, N)),))
+
+
+def test_per_channel_masks_unique():
+    g = _graph2()
+    masks = build_stage_masks(g, channels=3)
+    assert masks[0].shape == (3, 2, N)
+    flat = np.asarray(masks[0]).reshape(6, N)
+    assert len({tuple(row) for row in flat}) == 6  # no (channel, loop) reuse
+
+
+# ---------------------------------------------------------------------------
+# Depth-1 special case == legacy reservoir, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["ref", "fast", "kernel"])
+def test_depth1_states_bitwise(method):
+    j, _ = _stream(0)
+    st = ReservoirStage(model=MODEL, n_nodes=N, mask_seed=5)
+    g = chain(st)
+    masks = build_stage_masks(g)
+    ref, fin_ref = generate_states(MODEL, j, make_mask(N, seed=5),
+                                   method=method, return_final=True)
+    got, fin = graph_states(g, j, masks, method=method, return_final=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(fin[0][:, 0]), np.asarray(fin_ref))
+
+
+@pytest.mark.parametrize("method", ["fast", "kernel"])
+def test_depth1_streaming_fit_bitwise(method):
+    """Composed streamed fit at depth 1 == fit_ridge_streaming, bit for bit
+    (weights, λ index, and the train -> test carry)."""
+    j, y = _stream(1)
+    st = ReservoirStage(model=MODEL, n_nodes=N, mask_seed=5)
+    g = chain(st)
+    masks = build_stage_masks(g)
+    w_ref, i_ref, s_ref = fit_ridge_streaming(
+        MODEL, make_mask(N, seed=5), j, y, washout=W0, chunk_k=CHUNK,
+        lambdas=LAMS, state_method=method, use_kernel=True)
+    w_c, i_c, s_c = fit_ridge_streaming_composed(
+        g, masks, j, y, washout=W0, chunk_k=CHUNK, lambdas=LAMS,
+        state_method=method, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(w_c), np.asarray(w_ref))
+    np.testing.assert_array_equal(np.asarray(i_c), np.asarray(i_ref))
+    np.testing.assert_array_equal(np.asarray(s_c[0][:, 0]), np.asarray(s_ref))
+
+
+def test_depth1_experiment_topology_bitwise():
+    """ExperimentConfig.topology at depth 1 reproduces the legacy streaming
+    Experiment exactly — predictions, metrics, weights."""
+    ds = tasks.narma10(420, seed=2)
+    base = dict(n_nodes=N, washout=W0, state_noise_rel=0.0,
+                stream_chunk_k=CHUNK, state_method="fast", ridge_l2=LAMS)
+    r0 = Experiment(ExperimentConfig(**base)).run_dataset(ds)
+    g = chain(ReservoirStage(model=MODEL, n_nodes=N, mask_seed=1))
+    r1 = Experiment(ExperimentConfig(**base, topology=g)).run_dataset(ds)
+    np.testing.assert_array_equal(r0.y_pred, r1.y_pred)
+    np.testing.assert_array_equal(r0.nrmse, r1.nrmse)
+    np.testing.assert_array_equal(r0.readout_w, r1.readout_w)
+    np.testing.assert_array_equal(r0.lam, r1.lam)
+
+
+# ---------------------------------------------------------------------------
+# Composed chain: oracle parity + chunk-resume bit-exactness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["fast", "kernel"])
+def test_composed_fit_matches_materialized_oracle(method):
+    """Streamed composed fit ≈ Gram fit of the materialized graph_states
+    features: same λ choice, per-stage carries exactly the oracle's, and
+    *predictions* at parity.  The comparison is prediction-level, not raw
+    weights: a multi-loop stage's shared drive makes the composed Gram
+    genuinely rank-deficient (cond ≈ 1/eps), so the weight vector is only
+    unique up to the null space — f32 association differences between the
+    two accumulation orders move w along it while X·w stays put."""
+    from repro.pipeline import with_bias
+    j, y = _stream(2)
+    g = _graph2()
+    masks = build_stage_masks(g)
+    w_s, i_s, s_s = fit_ridge_streaming_composed(
+        g, masks, j, y, washout=W0, chunk_k=CHUNK, lambdas=LAMS,
+        state_method=method, use_kernel=True)
+    feats, carr = graph_states(g, j, masks, method=method, return_final=True)
+    w_m, i_m = fit_ridge_batched(feats[:, W0:], y[:, W0:], lambdas=LAMS,
+                                 use_kernel=True)
+    assert np.array_equal(np.asarray(i_s), np.asarray(i_m))
+    x = np.asarray(with_bias(feats[:, W0:]))
+    p_s = np.einsum("btf,bfc->btc", x, np.asarray(w_s))
+    p_m = np.einsum("btf,bfc->btc", x, np.asarray(w_m))
+    np.testing.assert_allclose(p_s, p_m, atol=0.02)
+    for got, ref in zip(s_s, carr):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=5e-7)
+
+
+@pytest.mark.parametrize("cuts", [[13], [32, 64], [7, 40, 41, 89]],
+                         ids=["mid", "aligned", "ragged"])
+def test_composed_resume_bit_exact(cuts):
+    """Chunking the composed chain at fixed splits replays the exact
+    arithmetic of the uninterrupted run — features AND every stage carry
+    (the hypothesis property generalises the splits; this mirror keeps the
+    invariant exercised on hypothesis-free images)."""
+    j, _ = _stream(3)
+    g = _graph2()
+    masks = build_stage_masks(g)
+    full, fin = graph_states(g, j, masks, method="fast", return_final=True)
+    bounds = [0] + cuts + [K]
+    s = None
+    parts = []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        states, s = graph_states(g, j[:, lo:hi], masks, s0=s, method="fast",
+                                 return_final=True)
+        parts.append(np.asarray(states))
+    np.testing.assert_array_equal(np.concatenate(parts, axis=1),
+                                  np.asarray(full))
+    for got, ref in zip(s, fin):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_multi_loop_stage_is_lane_fold():
+    """A loops=L stage equals L independent single-mask reservoirs sharing
+    the drive — the lane fold adds no coupling between loops."""
+    j, _ = _stream(4)
+    st = ReservoirStage(model=MODEL, n_nodes=N, loops=2, mask_seed=3)
+    masks = build_stage_masks(chain(st))[0]
+    feats, carry = stage_states(st, j, masks, None, method="fast")
+    for l in range(2):
+        ref, fin = generate_states(MODEL, j, masks[l], method="fast",
+                                   return_final=True)
+        np.testing.assert_array_equal(
+            np.asarray(feats[..., l * N:(l + 1) * N]), np.asarray(ref))
+        np.testing.assert_array_equal(np.asarray(carry[:, l]), np.asarray(fin))
+
+
+def test_link_drive_bounded():
+    """The default saturable link keeps any feature scale inside (-1, 1) —
+    the drive range downstream SiliconMR stages are tuned on."""
+    st = ReservoirStage(model=MODEL, n_nodes=4, link="sat", link_gain=50.0)
+    f = jnp.asarray(np.random.default_rng(0).uniform(0, 1, (2, 16, 4)),
+                    jnp.float32)
+    p = stage_link_drive(st, f)
+    assert p.shape == (2, 16)
+    assert float(jnp.max(jnp.abs(p))) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Shared-readout WDM
+# ---------------------------------------------------------------------------
+
+
+def test_shared_readout_matches_materialized_concat():
+    """Shared-readout streamed fit ≈ one-shot Gram fit over the materialized
+    [K, R·N] concat features; carry exact, λ index equal."""
+    rng = np.random.default_rng(5)
+    r = 4
+    masks = jnp.stack([make_mask(N, seed=20 + i) for i in range(r)])
+    j = jnp.asarray(rng.uniform(0.05, 0.95, (r, K)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((K,)), jnp.float32)
+    w_s, i_s, s_s = fit_ridge_streaming_shared(
+        MODEL, masks, j, y, washout=W0, chunk_k=CHUNK, lambdas=LAMS,
+        state_method="fast", use_kernel=True)
+    assert w_s.shape == (r * N + 1, 1)
+    st, fin = generate_channel_states(MODEL, j, masks, method="fast",
+                                      return_final=True)
+    x = jnp.moveaxis(st, 0, 1).reshape(K, r * N)[W0:]
+    w_m, i_m = fit_ridge(x, y[W0:], lambdas=LAMS, use_kernel=True)
+    assert int(i_s) == int(i_m)
+    np.testing.assert_allclose(np.asarray(w_s), np.asarray(w_m),
+                               atol=0.1, rtol=0.1)
+    np.testing.assert_array_equal(np.asarray(s_s), np.asarray(fin))
+
+
+def test_shared_readout_r1_equals_per_channel():
+    """At R = 1 the cross-channel Gram has no cross terms: the shared fit
+    IS the per-channel WDM fit."""
+    rng = np.random.default_rng(6)
+    masks = make_mask(N, seed=9)[None]
+    j = jnp.asarray(rng.uniform(0.05, 0.95, (1, K)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((K,)), jnp.float32)
+    w_s, i_s, s_s = fit_ridge_streaming_shared(
+        MODEL, masks, j, y, washout=W0, chunk_k=CHUNK, lambdas=LAMS,
+        state_method="fast", use_kernel=True)
+    w_p, i_p, s_p = fit_ridge_streaming_wdm(
+        MODEL, masks, j, y[None], washout=W0, chunk_k=CHUNK, lambdas=LAMS,
+        state_method="fast", use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(w_s), np.asarray(w_p[0]))
+    assert int(i_s) == int(i_p[0])
+    np.testing.assert_array_equal(np.asarray(s_s), np.asarray(s_p))
+
+
+def test_wdm_shared_experiment_runs():
+    """WDMExperiment(shared_readout=True): ensemble-level result shapes and
+    a finite NRMSE on a real task."""
+    ds = tasks.narma10(420, seed=3)
+    cfg = ExperimentConfig(n_nodes=N, washout=W0, state_noise_rel=0.0,
+                           stream_chunk_k=CHUNK, state_method="fast",
+                           ridge_l2=LAMS)
+    r = 3
+    tr = np.stack([ds.inputs_train] * r)
+    te = np.stack([ds.inputs_test] * r)
+    res = WDMExperiment(cfg, r, shared_readout=True).run(
+        tr, ds.targets_train, te, ds.targets_test)
+    assert res.nrmse.shape == (1,) and np.isfinite(res.nrmse).all()
+    assert res.readout_w.shape == (1, r * N + 1)
+    assert res.y_pred.shape == (1, ds.targets_test.shape[0])
+
+
+def test_wdm_shared_validation():
+    cfg_nostream = ExperimentConfig(n_nodes=N, state_noise_rel=0.0)
+    with pytest.raises(ValueError, match="streaming"):
+        WDMExperiment(cfg_nostream, 2, shared_readout=True)
+    g = chain(ReservoirStage(model=MODEL, n_nodes=N))
+    cfg_topo = ExperimentConfig(n_nodes=N, state_noise_rel=0.0,
+                                stream_chunk_k=CHUNK, topology=g)
+    with pytest.raises(ValueError, match="shared_readout"):
+        WDMExperiment(cfg_topo, 2, shared_readout=True)
+
+
+def test_topology_requires_streaming():
+    g = chain(ReservoirStage(model=MODEL, n_nodes=N))
+    with pytest.raises(ValueError, match="stream_chunk_k"):
+        ExperimentConfig(n_nodes=N, topology=g, state_noise_rel=0.0)
+
+
+def test_wdm_per_channel_topology():
+    """WDMExperiment with a composed topology: per-channel stage masks,
+    per-channel readouts of width graph.width."""
+    ds = tasks.narma10(420, seed=4)
+    g = _graph2()
+    cfg = ExperimentConfig(n_nodes=N, washout=W0, state_noise_rel=0.0,
+                           stream_chunk_k=CHUNK, state_method="fast",
+                           ridge_l2=LAMS, topology=g)
+    r = 2
+    tr = np.stack([ds.inputs_train] * r)
+    te = np.stack([ds.inputs_test] * r)
+    trt = np.stack([ds.targets_train] * r)
+    tet = np.stack([ds.targets_test] * r)
+    res = WDMExperiment(cfg, r).run(tr, trt, te, tet)
+    assert res.nrmse.shape == (r,) and np.isfinite(res.nrmse).all()
+    assert res.readout_w.shape == (r, g.width + 1)
+
+
+# ---------------------------------------------------------------------------
+# Structural contract: no stage materialises a full-T block
+# ---------------------------------------------------------------------------
+
+
+def test_composed_fit_jaxpr_no_stage_tensor():
+    """Depth-3 streamed composed fit holds NO tensor carrying the full
+    stream axis at even the smallest stage's scale — each stage lives at
+    chunk granularity inside the one scan."""
+    g = chain(ReservoirStage(model=MODEL, n_nodes=N, loops=2, mask_seed=1),
+              ReservoirStage(model=MODEL, n_nodes=N, mask_seed=7),
+              ReservoirStage(model=MODEL, n_nodes=8, mask_seed=13))
+    masks = build_stage_masks(g)
+    j, y = _stream(7, k=160)
+    prog = Program(
+        lambda jj, yy: fit_ridge_streaming_composed(
+            g, masks, jj, yy, washout=W0, chunk_k=CHUNK, lambdas=LAMS,
+            state_method="kernel", use_kernel=True),
+        (j, y))
+    w_min = min(st.n_nodes for st in g.stages)
+    viols = check_rules(prog, [NoStateTensor(160, B * 160 * w_min,
+                                             what="stage tensor")])
+    assert not viols, [str(v) for v in viols]
+
+
+# ---------------------------------------------------------------------------
+# Memory-capacity suite rides the vmapped Experiment
+# ---------------------------------------------------------------------------
+
+
+def test_memory_capacity_suite_one_vmapped_experiment():
+    """The MC probe runs as ONE vmapped Experiment: B seeds × max_delay
+    target channels in a single jit call, predictions [B, T, D] scored by
+    metrics.memory_capacity_score.  A 40-node DFR reconstructs several
+    delays (MC measured ~3.2-3.8 here) and MC is bounded by the channel
+    count."""
+    from repro.core.metrics import memory_capacity_score
+    d_max = 10
+    batch = [tasks.memory_capacity(700, max_delay=d_max, seed=s)
+             for s in range(3)]
+    tr_in, tr_tg, te_in, te_tg = (
+        np.stack([getattr(d, f) for d in batch])
+        for f in ("inputs_train", "targets_train",
+                  "inputs_test", "targets_test"))
+    cfg = ExperimentConfig(model=MODEL, n_nodes=40, washout=30,
+                           ridge_l2=(1e-8, 1e-6, 1e-4))
+    res = Experiment(cfg).run(tr_in, tr_tg, te_in, te_tg)
+    assert res.y_pred.shape == te_tg.shape
+    mcs = [memory_capacity_score(te_tg[b], res.y_pred[b]) for b in range(3)]
+    for mc in mcs:
+        assert 1.5 < mc < d_max, mcs
+    assert float(np.mean(mcs)) > 2.5, mcs

@@ -79,6 +79,64 @@ def test_chunked_resume_bit_exact_for_arbitrary_splits(cuts, seed, method):
     np.testing.assert_array_equal(np.asarray(s), np.asarray(fin_full))
 
 
+@given(cuts=split_points(), seed=st.integers(0, 20))
+@settings(max_examples=40, deadline=None)
+def test_composed_graph_resume_bit_exact_for_arbitrary_splits(cuts, seed):
+    """The composed-graph carry tuple resumes bit-exactly at ANY split: the
+    per-stage carries thread independently through the chain, so chunking a
+    deep/multi-loop graph replays the uninterrupted arithmetic — features
+    and every stage's final state (DESIGN.md §13; fixed-point mirrors in
+    tests/test_composed.py)."""
+    from repro.core import ReservoirStage, build_stage_masks, chain
+    from repro.core.graph import graph_states
+    graph = chain(
+        ReservoirStage(model=MODEL, n_nodes=N, loops=2, mask_seed=3),
+        ReservoirStage(model=MODEL, n_nodes=5, mask_seed=11, link="sat"))
+    masks = build_stage_masks(graph)
+    j = _stream(seed)
+    full, fin = graph_states(graph, j, masks, method="fast",
+                             return_final=True)
+    bounds = [0] + cuts + [K]
+    s = None
+    parts = []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        states, s = graph_states(graph, j[:, lo:hi], masks, s0=s,
+                                 method="fast", return_final=True)
+        parts.append(np.asarray(states))
+    np.testing.assert_array_equal(np.concatenate(parts, axis=1),
+                                  np.asarray(full))
+    for got, ref in zip(s, fin):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@given(chunk=st.integers(5, 40), seed=st.integers(0, 10))
+@settings(max_examples=25, deadline=None)
+def test_composed_fit_s_end_matches_oracle_for_any_chunk(chunk, seed):
+    """fit_ridge_streaming_composed's carry tuple after period K - 1 equals
+    the materialized graph oracle's for ANY chunk_k, to 1-ulp slack
+    (atol 1e-6): the jitted chunk scan may fuse the link-drive
+    mean/nonlinearity differently from the eager oracle. Eager per-chunk
+    replay of the same states_fn IS bitwise — that property lives in
+    test_composed_graph_resume_bit_exact_for_arbitrary_splits above and in
+    test_composed.py's fixed-split mirror."""
+    from repro.core import ReservoirStage, build_stage_masks, chain
+    from repro.core.graph import graph_states
+    from repro.pipeline.ridge import fit_ridge_streaming_composed
+    graph = chain(
+        ReservoirStage(model=MODEL, n_nodes=N, loops=2, mask_seed=3),
+        ReservoirStage(model=MODEL, n_nodes=5, mask_seed=11, link="sat"))
+    masks = build_stage_masks(graph)
+    j = _stream(seed)
+    y = _stream(seed + 100)
+    _, fin = graph_states(graph, j, masks, method="fast", return_final=True)
+    _, _, s_end = fit_ridge_streaming_composed(
+        graph, masks, j, y, washout=8, chunk_k=chunk, lambdas=(1e-6,),
+        state_method="fast", use_kernel=False)
+    for got, ref in zip(s_end, fin):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-6, rtol=0)
+
+
 @given(chunk=st.integers(5, 40), seed=st.integers(0, 10))
 @settings(max_examples=30, deadline=None)
 def test_streaming_fit_s_end_bit_exact_for_any_chunk(chunk, seed):

@@ -1,9 +1,10 @@
 """Dataset generators: determinism, alignment, SNR correctness."""
 
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import tasks
+from repro.core import metrics, tasks
 
 
 def test_narma10_deterministic_and_aligned():
@@ -51,3 +52,79 @@ def test_channel_eq_snr(snr):
 def test_quantize_symbols():
     y = np.array([-3.4, -1.2, 0.2, 1.7, 2.6])
     np.testing.assert_array_equal(tasks.quantize_symbols(y), [-3, -1, 1, 1, 3])
+
+
+# ---------------------------------------------------------------------------
+# Memory-capacity task suite (core/tasks + metrics.memory_capacity_score)
+# ---------------------------------------------------------------------------
+
+
+def test_memory_capacity_delay_alignment():
+    """Target channel d IS the d-step-delayed input, across the split."""
+    ds = tasks.memory_capacity(400, max_delay=6, seed=2)
+    assert ds.targets_train.shape == (200, 6)
+    assert ds.targets_test.shape == (200, 6)
+    u = np.concatenate([ds.inputs_train, ds.inputs_test])
+    y = np.concatenate([ds.targets_train, ds.targets_test])
+    for d in range(1, 7):
+        np.testing.assert_array_equal(y[d:, d - 1], u[:-d])
+    again = tasks.memory_capacity(400, max_delay=6, seed=2)
+    np.testing.assert_array_equal(ds.targets_test, again.targets_test)
+
+
+@given(delay=st.integers(1, 8))
+@settings(max_examples=8, deadline=None)
+def test_delayed_xor_alignment(delay):
+    """y(k) = u(k) XOR u(k - delay) for every in-stream k, any delay."""
+    ds = tasks.delayed_xor(300, delay=delay, seed=1)
+    u = np.concatenate([ds.inputs_train, ds.inputs_test])
+    y = np.concatenate([ds.targets_train, ds.targets_test])
+    assert set(np.unique(u)) <= {0.0, 1.0}
+    assert set(np.unique(y)) <= {0.0, 1.0}
+    ref = np.logical_xor(u[delay:] > 0.5, u[:-delay] > 0.5).astype(np.float64)
+    np.testing.assert_array_equal(y[delay:], ref)
+
+
+@given(order=st.integers(1, 4), delay=st.integers(0, 3))
+@settings(max_examples=12, deadline=None)
+def test_parity_alignment(order, delay):
+    """y(k) = Π_m b(k - delay - m) with b = 2u - 1, for every in-stream k."""
+    ds = tasks.parity(300, order=order, delay=delay, seed=4)
+    u = np.concatenate([ds.inputs_train, ds.inputs_test])
+    y = np.concatenate([ds.targets_train, ds.targets_test])
+    assert set(np.unique(u)) <= {0.0, 1.0}
+    assert set(np.unique(y)) <= {-1.0, 1.0}
+    b = 2.0 * u - 1.0
+    ref = np.ones_like(y)
+    for m in range(order):
+        ref *= np.roll(b, delay + m)
+    start = delay + order          # before this, roll wraps the stream end
+    np.testing.assert_array_equal(y[start:], ref[start:])
+
+
+def test_memory_capacity_score_properties():
+    """MC = D for perfect reconstruction, ~0 for noise; constant channels
+    contribute 0 (not NaN); 1-D inputs are promoted to one channel."""
+    rng = np.random.default_rng(0)
+    y = rng.standard_normal((500, 8))
+    assert abs(metrics.memory_capacity_score(y, y) - 8.0) < 1e-12
+    noise = rng.standard_normal((500, 8))
+    assert metrics.memory_capacity_score(y, noise) < 0.2
+    y_const = y.copy()
+    y_const[:, 0] = 3.0
+    s = metrics.memory_capacity_score(y_const, y_const)
+    assert np.isfinite(s) and abs(s - 7.0) < 1e-12
+    assert abs(metrics.memory_capacity_score(y[:, 0], y[:, 0]) - 1.0) < 1e-12
+    # r² is shift/scale invariant per channel
+    assert abs(metrics.memory_capacity_score(y, 2.5 * y - 1.0) - 8.0) < 1e-9
+
+
+def test_mc_suite_validation():
+    with pytest.raises(ValueError):
+        tasks.memory_capacity(100, max_delay=0)
+    with pytest.raises(ValueError):
+        tasks.delayed_xor(100, delay=0)
+    with pytest.raises(ValueError):
+        tasks.parity(100, order=0)
+    with pytest.raises(ValueError):
+        tasks.parity(100, delay=-1)
