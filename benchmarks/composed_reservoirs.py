@@ -20,6 +20,15 @@ memory-capacity probe (`core/tasks.memory_capacity`, scored by
   (same τ everywhere) LOSE capacity at matched width because linear MC is
   dominated by loop length; the JSON records those cells too.
 
+Beyond linear capacity, the bit cells probe *nonlinear* memory on binary
+product tasks (delayed XOR, parity-3): the readout must multiply delayed
+inputs, which linear MC alone cannot buy.  These run the same 48-node
+layouts at γ = 0.6 (the paper's γ = 0.9 leaves every topology at chance on
+product tasks; see the M_BIT note), so the sin²-link compositions can show
+— or fail to show — a payoff past capacity.  The JSON records the
+composed-vs-single-loop bit-error margins (``bit_payoff``) without gating
+them; the margins are the measurement.
+
 Memory cells trace `fit_ridge_streaming_composed` (kernel path) at
 K = 10 000 and derive exact peak-bytes numbers from the jaxpr
 (`repro.analysis`): no stage of the chain may materialize a full-K state
@@ -135,6 +144,76 @@ def mc_cell(name: str, graph, batch) -> dict:
     }
 
 
+# Nonlinear-memory payoff probes: binary tasks where the readout must
+# compute a PRODUCT of delayed inputs (delayed XOR, parity-3), so linear MC
+# alone cannot solve them.  These run at their OWN operating point: feedback
+# strength γ sets the nonlinear-mixing regime, and at the paper's γ = 0.9
+# every topology sits at chance on product tasks (measured: bit error
+# 0.49-0.51), while γ ≲ 0.3 makes the single loop perfect (no headroom).
+# γ = 0.6 is the informative middle — single-loop bit error ≈ 0.17, so a
+# composed payoff (or penalty) is visible in either direction.  Each task
+# thresholds at the midpoint of ITS target alphabet (XOR targets {0, 1},
+# parity targets ±1).  Recorded, not gated: the margins are the measurement.
+M_BIT = SiliconMR(gamma=0.6)
+M_BIT_SLOW = SiliconMR(gamma=0.6, tau_ph_ps=150.0)
+BIT_TASKS = {
+    "delayed_xor": (lambda s: tasks.delayed_xor(1200, delay=2, seed=s), 0.5),
+    "parity3": (lambda s: tasks.parity(1200, order=3, delay=1, seed=s), 0.0),
+}
+BIT_SEEDS = 2
+
+
+def bit_topologies() -> dict[str, object]:
+    """The bit-task depth grid: same 48-node layouts, γ = 0.6 models."""
+    s = ReservoirStage
+    return {
+        "d1_l1_baseline": chain(
+            s(model=M_BIT, n_nodes=48, mask_seed=3)),
+        "d2_l1": chain(
+            s(model=M_BIT_SLOW, n_nodes=40, mask_seed=3, **SIN2),
+            s(model=M_BIT, n_nodes=8, mask_seed=10)),
+        "d3_l1": chain(
+            s(model=M_BIT_SLOW, n_nodes=36, mask_seed=3, **SIN2),
+            s(model=M_BIT, n_nodes=8, mask_seed=10, **SIN2),
+            s(model=M_BIT, n_nodes=4, mask_seed=17)),
+    }
+
+
+def bit_cell(task_name: str, make, thr: float, name: str, graph) -> dict:
+    """Bit-error rate of one topology on a binary product task."""
+    batch = stack_datasets([make(s) for s in range(BIT_SEEDS)])
+    cfg = ExperimentConfig(model=M_BIT, n_nodes=graph.width,
+                           washout=WASHOUT, ridge_l2=LAMS, topology=graph,
+                           stream_chunk_k=CHUNK, state_method="fast",
+                           state_noise_rel=0.0)
+    res = Experiment(cfg).run(*batch)
+    tg = np.asarray(batch[3]) > thr
+    yp = np.asarray(res.y_pred) > thr
+    err = np.mean(tg != yp, axis=1)
+    return {"task": task_name, "name": name, "depth": graph.depth,
+            "width": graph.width,
+            "bit_error_per_seed": [round(float(e), 4) for e in err],
+            "bit_error_mean": round(float(err.mean()), 4)}
+
+
+def bit_margins(cells: list[dict]) -> dict:
+    """Composed-vs-single-loop bit-error margins per task (+ = payoff)."""
+    out = {}
+    for task in BIT_TASKS:
+        rows = {c["name"]: c for c in cells if c["task"] == task}
+        base = rows["d1_l1_baseline"]
+        best = min((c for c in rows.values() if c["depth"] >= 2),
+                   key=lambda c: c["bit_error_mean"])
+        out[task] = {
+            "baseline_bit_error": base["bit_error_mean"],
+            "best_composed": best["name"],
+            "best_composed_bit_error": best["bit_error_mean"],
+            "margin": round(base["bit_error_mean"]
+                            - best["bit_error_mean"], 4),
+        }
+    return out
+
+
 def nrmse_cell(name: str, graph, batch) -> dict:
     """NARMA10 NRMSE of one topology (regression payoff column)."""
     cfg = ExperimentConfig(model=M_PAPER, n_nodes=graph.width, washout=50,
@@ -247,6 +326,12 @@ def build_report(*, smoke: bool) -> dict:
         "mc_cells": mc_cells,
         "trace_cells": trace_cells,
     }
+    bit_topo = bit_topologies()
+    bit_cells = [bit_cell(task, make, thr, name, g)
+                 for task, (make, thr) in BIT_TASKS.items()
+                 for name, g in bit_topo.items()]
+    report["bit_cells"] = bit_cells
+    report["bit_payoff"] = bit_margins(bit_cells)
     if not smoke:
         nb = stack_datasets([tasks.narma10(2000, seed=s) for s in range(4)])
         report["nrmse_cells"] = [
@@ -275,6 +360,11 @@ def run() -> list[str]:
                         f"{p['margin']:.3f}",
                         f"best={p['best_composed']};"
                         f"baseline={p['baseline_mc']:.3f}"))
+    for task, m in report["bit_payoff"].items():
+        rows.append(csv_row(f"composed_reservoirs/{task}/bit_margin",
+                            f"{m['margin']:.4f}",
+                            f"best={m['best_composed']};"
+                            f"baseline={m['baseline_bit_error']:.4f}"))
     for c in report.get("nrmse_cells", []):
         rows.append(csv_row(f"composed_reservoirs/{c['name']}/narma10_nrmse",
                             f"{c['nrmse_mean']:.4f}", f"depth={c['depth']}"))

@@ -16,12 +16,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list of fig5,fig6,fig7,table1,kernels,"
                          "kernel_batching,streaming_fusion,wdm_streaming,"
-                         "composed_reservoirs,dfr_serving,chaos_soak,roofline")
+                         "composed_reservoirs,dfr_serving,chaos_soak,"
+                         "device_sweep,roofline")
     args = ap.parse_args()
 
-    from . import (chaos_soak, composed_reservoirs, dfr_serving, fig5_nrmse,
-                   fig6_ser, fig7_training_time, kernel_batching, kernel_bench,
-                   roofline, streaming_fusion, table1_power, wdm_streaming)
+    from . import (chaos_soak, composed_reservoirs, device_sweep, dfr_serving,
+                   fig5_nrmse, fig6_ser, fig7_training_time, kernel_batching,
+                   kernel_bench, roofline, streaming_fusion, table1_power,
+                   wdm_streaming)
 
     sections = {
         "fig5": fig5_nrmse.run,
@@ -35,6 +37,7 @@ def main() -> None:
         "composed_reservoirs": composed_reservoirs.run,
         "dfr_serving": dfr_serving.run,
         "chaos_soak": chaos_soak.run,
+        "device_sweep": device_sweep.run,
         "roofline": roofline.run,
     }
     chosen = args.only.split(",") if args.only else list(sections)

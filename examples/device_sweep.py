@@ -1,0 +1,56 @@
+"""Device design-space exploration: one compiled program, a whole map.
+
+The physics-fidelity device subsystem (repro.devices, DESIGN.md §14) models
+the microring as a coupled-mode-theory cavity — intracavity energy, free
+carriers and temperature, sub-stepped inside every virtual-node tick — and
+calibrates its zero-power limit to the paper's SiliconMR tick map.  From
+that anchor, a (detuning × loss × power) robustness sweep answers the
+fabrication question the ideal model cannot: how far off-nominal can the
+fabricated ring drift before the accelerator stops computing?
+
+The sweep is the point of this example: every grid cell becomes a batch
+lane of ONE jit-compiled Experiment (swept parameters are traced operands,
+not jit statics), so the map below compiles once — and re-running with new
+grid values compiles nothing (watch the cache counter).
+
+  PYTHONPATH=src python examples/device_sweep.py
+
+Where to next:
+  benchmarks/device_sweep.py — the gated version: calibration-parity bound,
+                               jaxpr contract checks, NARMA10 + channel-eq
+                               stable-region maps (BENCH_device_sweep.json)
+"""
+
+from repro.core import SiliconMR, tasks
+from repro.devices import (SweepGrid, calibrated_twin, node_parity,
+                           pipeline_cache_size, run_device_sweep)
+
+mr = SiliconMR()
+cavity = calibrated_twin(mr)   # CMT cavity whose low-power limit IS SiliconMR
+print(f"calibration: per-tick |CMT - SiliconMR| over [0,1]^3 = "
+      f"{node_parity(mr, cavity):.2e}\n")
+
+grid = SweepGrid(detune=(-1.0, -0.5, 0.0, 0.5, 1.0),   # linewidths off resonance
+                 loss_scale=(1.0, 1.5),                # fabricated-Q penalty
+                 power=(0.0, 1.0))                     # nonlinearities off/on
+res = run_device_sweep(cavity, grid, tasks.narma10(1200, seed=0),
+                       n_nodes=64, washout=50, stream_chunk_k=128)
+
+print(f"NARMA10 NRMSE over the {grid.shape} grid ({grid.size} lanes, "
+      f"one program):")
+for i, d in enumerate(grid.detune):
+    for j, l in enumerate(grid.loss_scale):
+        row = " ".join(f"{res.nrmse[i, j, k]:.3f}" for k in range(len(grid.power)))
+        print(f"  detune {d:+.1f}  loss x{l:.1f}:  {row}")
+
+region = res.stable_region(nrmse_max=0.8)
+print(f"\nstable region (NRMSE <= 0.8): {region['summary']['n_stable']}/"
+      f"{grid.size} cells, best point {region['summary']['best_point']}")
+
+c0 = pipeline_cache_size()
+shifted = SweepGrid(detune=tuple(d + 0.1 for d in grid.detune),
+                    loss_scale=(1.1, 1.6), power=(0.2, 1.2))
+run_device_sweep(cavity, shifted, tasks.narma10(1200, seed=0),
+                 n_nodes=64, washout=50, stream_chunk_k=128)
+print(f"\nre-sweep with new grid values: compiled programs {c0} -> "
+      f"{pipeline_cache_size()} (no retrace)")

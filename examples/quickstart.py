@@ -16,6 +16,9 @@ Where to next:
                                      single loop on memory capacity
   examples/online_equalization.py  — ONLINE readouts tracking a drifting
                                      link (RLS forgetting, DESIGN.md §10)
+  examples/device_sweep.py         — CMT cavity physics + a (detuning ×
+                                     loss × power) robustness map as ONE
+                                     compiled program (DESIGN.md §14)
   launch/serve_dfr.py              — continuous-batching DFR serving:
     PYTHONPATH=src python -m repro.launch.serve_dfr --requests 64 --batch 16
 """

@@ -169,6 +169,78 @@ def _fit_ridge_streaming_wdm():
             _streaming_fit_rules())
 
 
+# Device-physics entries (DESIGN.md §14): the CMT cavity's sub-stepped tick
+# integration must hold the SAME structural contracts as the closed-form
+# models — the substeps unroll inside the node update, so every rule that
+# held for SiliconMR must hold verbatim with MRCavityCMT swapped in.
+def _cmt_model():
+    from repro.core import SiliconMR
+    from repro.devices import calibrated_twin
+    return calibrated_twin(SiliconMR(), power_mw=1.0)
+
+
+@register("experiment_cmt_kernel",
+          "CMT-cavity pipeline through the Pallas dfr_scan (substeps in-tile)")
+def _experiment_cmt_kernel():
+    prog = _pipeline_program("experiment_cmt_kernel", model=_cmt_model(),
+                             state_method="kernel", readout_use_kernel=True)
+    # identical launch budget to experiment_kernel: the substep loop unrolls
+    # inside the node update — richer physics may not add launches
+    return prog, (NoHostCallback(), NoDtypeAbove("float32"),
+                  MaxPallasCalls(3), VmemBudget())
+
+
+def _device_sweep_program(name, *, state_dtype="float32", use_kernel=False):
+    from repro.devices import CMTSweepParams
+    from repro.pipeline.experiment import _run_pipeline
+    cfg, mask, args = _experiment_setup(
+        model=_cmt_model(), state_method="fast", stream_chunk_k=_CHUNK,
+        stream_state_dtype=state_dtype, readout_use_kernel=use_kernel)
+    lanes = (jnp.zeros((_B,), jnp.float32),    # detune
+             jnp.ones((_B,), jnp.float32),     # loss_scale
+             jnp.ones((_B,), jnp.float32))     # power
+    fn = lambda a, b, c, d, pd, pl, pp: _run_pipeline(
+        cfg, mask, a, b, c, d, dev_params=CMTSweepParams(pd, pl, pp))
+    return Program(fn, args + lanes, name=name)
+
+
+# The swept map runs on the jnp fast path (the kernel keeps static models),
+# so the scan budget is its true nesting: fit and eval each run the chunk
+# scan -> per-chunk period scan -> in-period node chain scan.
+_SWEEP_SCANS = 6
+
+
+@register("device_sweep",
+          "Swept-params CMT robustness map: grid as lanes, ONE streamed trace")
+def _device_sweep():
+    prog = _device_sweep_program("device_sweep")
+    rules = (NoHostCallback(), NoDtypeAbove("float32"),
+             MaxScans(_SWEEP_SCANS),
+             MaxPallasCalls(0),         # jnp state + einsum Gram throughout
+             NoStateTensor(_T_TR, _B * _T_TR * _N, what="train state tensor"),
+             NoStateTensor(_T_TE, _B * _T_TE * _N, what="test state tensor"))
+    return prog, rules
+
+
+@register("device_sweep_bf16",
+          "Swept CMT map, bf16 state chunks (no silent f32 chunk upcast)")
+def _device_sweep_bf16():
+    prog = _device_sweep_program("device_sweep_bf16", state_dtype="bfloat16",
+                                 use_kernel=True)
+    # In-scan state *compute* is f32 by design on the jnp path (only the
+    # emitted chunk narrows — generate_states docstring), so the [B, chunk,
+    # N] block and its period-scan transpose are declared benign.  Anything
+    # else wide at chunk scale — e.g. a silently re-promoted [B, chunk, N+1]
+    # feature block downstream of the bf16 chunk — still trips.
+    benign = ((_B, _CHUNK, _N), (_CHUNK, _B, _N))
+    rules = (NoHostCallback(), NoDtypeAbove("float32"),
+             MaxScans(_SWEEP_SCANS), VmemBudget(),
+             NoStateTensor(_T_TR, _B * _T_TR * _N, what="train state tensor"),
+             NoStateTensor(_T_TE, _B * _T_TE * _N, what="test state tensor"),
+             NoSilentUpcast(_CHUNK, _B * _CHUNK * _N, benign_shapes=benign))
+    return prog, rules
+
+
 # Composed-graph trace shapes: a depth-3 chain whose smallest stage sets the
 # NoStateTensor floor — ANY stage materializing its full-T [B·L, T, N] block
 # (the smallest is _B·_T_TR·8 elements) trips the rule, while the O(B·T)

@@ -6,8 +6,9 @@ from .graph import (ReservoirGraph, ReservoirStage, build_stage_masks, chain,
                     graph_states)
 from .masking import make_mask, masked_input, mls_sequence, sample_and_hold
 from .metrics import memory_capacity_score, nrmse, ser
-from .nonlinear import (LINK_NONLINEARITIES, MZISine, MackeyGlass, NLModel,
-                        SiliconMR, SiliconMRLiteral)
+from .nonlinear import (LINK_NONLINEARITIES, MODEL_REGISTRY, MZISine,
+                        MackeyGlass, NLModel, SiliconMR, SiliconMRLiteral,
+                        register_model)
 from .readout import Readout, fit_readout
 from .reservoir import generate_channel_states, generate_states, init_state
 
@@ -15,6 +16,7 @@ __all__ = [
     "DFRCAccelerator",
     "DFRCConfig",
     "LINK_NONLINEARITIES",
+    "MODEL_REGISTRY",
     "MZISine",
     "MackeyGlass",
     "NLModel",
@@ -36,6 +38,7 @@ __all__ = [
     "mls_sequence",
     "nrmse",
     "power",
+    "register_model",
     "sample_and_hold",
     "ser",
     "tasks",

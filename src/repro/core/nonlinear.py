@@ -1,6 +1,7 @@
 """Nonlinear (NL) node models for delayed-feedback reservoirs.
 
-Four devices; the first three match the paper's evaluation (Section V.A):
+Closed-form devices; the first three match the paper's evaluation
+(Section V.A):
 
 * :class:`SiliconMR`      — the paper's contribution: an active silicon
   microring resonator's TPA drop-port response, paper Eq. (6-7) under the
@@ -12,6 +13,19 @@ Four devices; the first three match the paper's evaluation (Section V.A):
 * :class:`SiliconMRLiteral` — paper Eq. (6-7) *exactly as printed*.  Kept as
   an ablation: the printed recurrence is exponentially unstable (see below),
   which tests/benchmarks demonstrate; it is not used for headline numbers.
+
+The model surface extends beyond this module:
+
+* ``MODEL_REGISTRY`` (below) names every reservoir device model, keyed by a
+  stable string id; subsystems register theirs on import via
+  :func:`register_model`.  ``repro.devices`` adds ``"mr_cavity_cmt"`` — the
+  physics-fidelity coupled-mode-theory cavity (sub-stepped TPA, free-carrier
+  and thermal dynamics inside each tick; DESIGN.md §14) whose zero-power
+  calibrated limit recovers :class:`SiliconMR` (devices/calibrate.py).
+* ``LINK_NONLINEARITIES`` (bottom of this module) are the *inter-stage* link
+  maps of composed reservoir graphs (DESIGN.md §13) — identity / saturable
+  ('sat') / MZI sin² ('sin2') — referenced by name from ``ReservoirStage``,
+  not device models themselves.
 
 The θ-corrected reading (DESIGN.md §7)
 --------------------------------------
@@ -266,6 +280,38 @@ class MZISine:
 
 
 NLModel = SiliconMR | SiliconMRLiteral | MackeyGlass | MZISine
+
+
+# ---------------------------------------------------------------------------
+# Model registry: every reservoir device model, by stable string id
+# ---------------------------------------------------------------------------
+#
+# The union alias above is a *type hint*; the contract itself is structural
+# (``node_update``/``period_update`` on a hashable frozen dataclass), and
+# other subsystems provide models too.  The registry is the runtime source
+# of truth — config files, benchmarks and serving ingest resolve model ids
+# through it, and ``repro.devices`` registers its CMT cavity here on import.
+
+MODEL_REGISTRY: dict[str, type] = {
+    "silicon_mr": SiliconMR,
+    "silicon_mr_literal": SiliconMRLiteral,
+    "mackey_glass": MackeyGlass,
+    "mzi_sine": MZISine,
+}
+
+
+def register_model(model_id: str, cls: type) -> type:
+    """Register a reservoir device model class under a stable string id.
+
+    Idempotent for the same class; a different class under an existing id is
+    a programming error (two subsystems fighting over a name) and raises.
+    """
+    prev = MODEL_REGISTRY.get(model_id)
+    if prev is not None and prev is not cls:
+        raise ValueError(
+            f"model id {model_id!r} already registered to {prev.__name__}")
+    MODEL_REGISTRY[model_id] = cls
+    return cls
 
 
 # ---------------------------------------------------------------------------

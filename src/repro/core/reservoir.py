@@ -77,6 +77,46 @@ def _states_fast(model: NLModel, u: jnp.ndarray, s0: jnp.ndarray) -> jnp.ndarray
     return jnp.moveaxis(states, 0, 1)
 
 
+# Swept-parameter variants (DESIGN.md §14): identical scans, but the model's
+# operating point arrives as a TRACED ``p`` pytree (leaves scalar or [B] —
+# one device grid point per batch lane) through the model's ``*_p`` method
+# contract.  Parameters are operands, so a design-space sweep over them
+# never retraces; the model itself stays the hashable jit static.
+
+@partial(jax.jit, static_argnames=("model",))
+def _states_ref_p(model, p, u: jnp.ndarray, s0: jnp.ndarray) -> jnp.ndarray:
+    """Sequential oracle at traced per-lane device parameters ``p``."""
+
+    def period(carry, u_k):
+        s_prev, s_last = carry
+
+        def node(s_prev_node, xs):
+            u_i, s_tau_i = xs
+            s_i = model.node_update_p(p, u_i, s_tau_i, s_prev_node)
+            return s_i, s_i
+
+        xs = (jnp.moveaxis(u_k, -1, 0), jnp.moveaxis(s_prev, -1, 0))
+        s_last_new, s_nodes = jax.lax.scan(node, s_last, xs)
+        s_new = jnp.moveaxis(s_nodes, 0, -1)
+        return (s_new, s_last_new), s_new
+
+    (_, _), states = jax.lax.scan(period, (s0, s0[..., -1]), jnp.moveaxis(u, 1, 0))
+    return jnp.moveaxis(states, 0, 1)
+
+
+@partial(jax.jit, static_argnames=("model",))
+def _states_fast_p(model, p, u: jnp.ndarray, s0: jnp.ndarray) -> jnp.ndarray:
+    """Period-scan path at traced per-lane device parameters ``p``."""
+
+    def period(carry, u_k):
+        s_prev, s_last = carry
+        s_new = model.period_update_p(p, u_k, s_prev, s_last)
+        return (s_new, s_new[..., -1]), s_new
+
+    (_, _), states = jax.lax.scan(period, (s0, s0[..., -1]), jnp.moveaxis(u, 1, 0))
+    return jnp.moveaxis(states, 0, 1)
+
+
 def generate_states(
     model: NLModel,
     j: jnp.ndarray,
@@ -87,6 +127,7 @@ def generate_states(
     block_s: int | None = None,
     return_final: bool = False,
     state_dtype=None,
+    dev_params=None,
 ):
     """DFR states for sample series ``j`` [..., K] -> [..., K, N].
 
@@ -94,6 +135,13 @@ def generate_states(
     (Pallas; interpret-mode on CPU).  ``block_s`` sizes the kernel's sublane
     tile (None = smallest of {1, 2, 4, 8} covering the batch — see
     kernels/dfr_scan/ops.py); ignored by the jnp paths.
+
+    ``dev_params`` threads a *traced* device operating-point pytree (e.g.
+    ``devices.cmt.CMTSweepParams``; leaves scalar or [B], one grid point per
+    batch lane) into the model's ``node_update_p``/``period_update_p``
+    contract — how ``devices/sweep.py`` runs a whole (detuning × loss ×
+    power) map as one program.  jnp paths only; the Pallas kernel keeps the
+    static-model contract (per-lane parameter tiles are a ROADMAP follow-on).
 
     ``return_final=True`` additionally returns the final reservoir state
     [..., N] — feed it back as ``s0`` to resume the scan (train -> test
@@ -117,6 +165,11 @@ def generate_states(
             s0b = jnp.broadcast_to(s0b[None], (jb.shape[0], n_nodes))
 
     if method == "kernel":
+        if dev_params is not None:
+            raise NotImplementedError(
+                "dev_params (traced per-lane device parameters) are not "
+                "supported on the Pallas kernel path; sweep with "
+                "method='fast' or 'ref' (ROADMAP: swept-params kernel tiles)")
         from repro.kernels.dfr_scan import ops as dfr_ops
 
         out = dfr_ops.dfr_scan(model, jb, mask, s0b, block_s=block_s,
@@ -126,9 +179,11 @@ def generate_states(
     else:
         u = masked_input(jb, mask)
         if method == "ref":
-            states = _states_ref(model, u, s0b)
+            states = (_states_ref(model, u, s0b) if dev_params is None
+                      else _states_ref_p(model, dev_params, u, s0b))
         elif method == "fast":
-            states = _states_fast(model, u, s0b)
+            states = (_states_fast(model, u, s0b) if dev_params is None
+                      else _states_fast_p(model, dev_params, u, s0b))
         else:
             raise ValueError(f"unknown method {method!r}")
         s_final = states[:, -1, :] if return_final else None

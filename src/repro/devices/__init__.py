@@ -1,0 +1,44 @@
+"""Physics-fidelity device subsystem (DESIGN.md §14).
+
+Richer, swappable microring device models behind the same
+``node_update``/``period_update`` contract as ``core/nonlinear.py``, plus
+the small-signal calibration that anchors them to the paper's model and the
+batched design-space-exploration sweep that maps their robustness:
+
+* :mod:`~repro.devices.cmt`       — :class:`MRCavityCMT`, a coupled-mode-
+  theory cavity (intracavity energy + free carriers + temperature,
+  sub-stepped inside each virtual-node tick) with TPA, free-carrier
+  absorption/dispersion, thermal dispersion and linear loss;
+  :class:`CMTSweepParams`, the traced per-lane operating-point pytree.
+* :mod:`~repro.devices.calibrate` — ``calibrated_twin`` (the CMT whose
+  zero-power limit IS ``SiliconMR``'s tick map), small-signal gain
+  measurement, per-tick parity bounds.
+* :mod:`~repro.devices.sweep`     — ``SweepGrid``/``run_device_sweep``:
+  a (detuning × loss × power) grid folded into batch lanes of ONE compiled
+  vmapped Experiment (no per-point retrace; jaxpr-gated).
+
+Importing this package registers ``MRCavityCMT`` in
+``core.nonlinear.MODEL_REGISTRY`` under ``"mr_cavity_cmt"``.
+"""
+
+from repro.core.nonlinear import register_model
+
+from .calibrate import (calibrated_twin, calibration_report, node_parity,
+                        small_signal_gains)
+from .cmt import CMTSweepParams, MRCavityCMT
+from .sweep import SweepGrid, SweepResult, pipeline_cache_size, run_device_sweep
+
+register_model("mr_cavity_cmt", MRCavityCMT)
+
+__all__ = [
+    "CMTSweepParams",
+    "MRCavityCMT",
+    "SweepGrid",
+    "SweepResult",
+    "calibrated_twin",
+    "calibration_report",
+    "node_parity",
+    "pipeline_cache_size",
+    "run_device_sweep",
+    "small_signal_gains",
+]

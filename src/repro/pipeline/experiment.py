@@ -253,18 +253,32 @@ def _quantize(y: jnp.ndarray) -> jnp.ndarray:
 
 
 def _gen_states(cfg: ExperimentConfig, mask, j, *, wdm: bool, s0=None,
-                return_final: bool = False, state_dtype=None):
+                return_final: bool = False, state_dtype=None,
+                dev_params=None):
     """State generation for both workloads: ``mask`` is [N] broadcast over B
     task instances (the paper's sweep) or, with ``wdm=True``, [R, N] per-lane
-    masks (one wavelength channel per batch row — DESIGN.md §9)."""
-    gen = generate_channel_states if wdm else generate_states
-    return gen(cfg.model, j, mask, s0=s0, method=cfg.state_method,
-               block_s=cfg.kernel_block_s, return_final=return_final,
-               state_dtype=state_dtype)
+    masks (one wavelength channel per batch row — DESIGN.md §9).
+
+    ``dev_params`` threads traced per-lane device parameters into the model
+    (device design-space sweeps, DESIGN.md §14) — single-mask workloads only;
+    the WDM per-channel-mask path keeps the static-model contract."""
+    if wdm:
+        if dev_params is not None:
+            raise NotImplementedError(
+                "dev_params sweeps use the single-mask workload; per-channel "
+                "WDM masks with per-lane device parameters are not supported")
+        gen = generate_channel_states
+        return gen(cfg.model, j, mask, s0=s0, method=cfg.state_method,
+                   block_s=cfg.kernel_block_s, return_final=return_final,
+                   state_dtype=state_dtype)
+    return generate_states(cfg.model, j, mask, s0=s0, method=cfg.state_method,
+                           block_s=cfg.kernel_block_s,
+                           return_final=return_final,
+                           state_dtype=state_dtype, dev_params=dev_params)
 
 
 def _eval_streaming(cfg: ExperimentConfig, mask, j_te, te_tg3, w_fit, s0, *,
-                    wdm: bool = False, states_fn=None):
+                    wdm: bool = False, states_fn=None, dev_params=None):
     """Chunked test evaluation: states per chunk, running error accumulators.
 
     ``te_tg3`` [B, T, C].  Returns (y_raw [B, T, C] or None, acc) where acc
@@ -317,7 +331,8 @@ def _eval_streaming(cfg: ExperimentConfig, mask, j_te, te_tg3, w_fit, s0, *,
         else:
             states, s = _gen_states(cfg, mask, j_c, wdm=wdm, s0=s,
                                     return_final=True,
-                                    state_dtype=cfg._stream_state_dtype_arg)
+                                    state_dtype=cfg._stream_state_dtype_arg,
+                                    dev_params=dev_params)
         y_hat = jnp.einsum("btf,bfc->btc", with_bias(states), w_fit,
                            preferred_element_type=jnp.float32)
         tidx = t_start + jnp.arange(chunk_k, dtype=jnp.int32)
@@ -356,8 +371,16 @@ def _streaming_metrics(acc, t_test: int, *, channel_axis: bool):
 
 @functools.partial(jax.jit, static_argnames=("cfg", "wdm", "shared"))
 def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg,
-                  wdm: bool = False, shared: bool = False):
+                  wdm: bool = False, shared: bool = False, dev_params=None):
     """The whole experiment as one XLA program.  All arrays [B, T*].
+
+    ``dev_params`` (an *operand* pytree, e.g. ``devices.cmt.CMTSweepParams``
+    with per-lane [B] leaves) sweeps the device operating point across batch
+    lanes without retracing: same cfg + same shapes + new parameter VALUES
+    reuse the compiled program (DESIGN.md §14).  Single-mask workloads only
+    (``wdm``/``shared``/``topology`` keep the static-model contract); the
+    ``None`` default adds no operands, so legacy call sites trace the exact
+    program they always did.
 
     ``wdm=True`` runs the WDM ensemble workload: the batch axis is R
     wavelength channels and ``mask`` is a per-channel [R, N] stack — state
@@ -430,6 +453,12 @@ def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg,
             y_raw3, acc = _eval_streaming(
                 cfg, mask, jnp.moveaxis(j_te, 0, 1)[None], te_tg3,
                 w_fit, (s_1[None],), states_fn=eval_fn)
+        elif dev_params is not None:
+            w_fit, lam_idx, s_carry = fit_ridge_streaming(
+                cfg.model, mask, j_tr, tr_tg, dev_params=dev_params, **kw)
+            y_raw3, acc = _eval_streaming(cfg, mask, j_te, te_tg3,
+                                          w_fit, s_carry,
+                                          dev_params=dev_params)
         else:
             fit = fit_ridge_streaming_wdm if wdm else fit_ridge_streaming
             w_fit, lam_idx, s_carry = fit(cfg.model, mask, j_tr, tr_tg, **kw)
@@ -445,8 +474,10 @@ def _run_pipeline(cfg: ExperimentConfig, mask, tr_in, tr_tg, te_in, te_tg,
         return y_out, nrmse, ser, lam, w_fit
 
     # -- reservoir layer: batched state generation, carry train -> test ------
-    st_tr, s_carry = _gen_states(cfg, mask, j_tr, wdm=wdm, return_final=True)
-    st_te = _gen_states(cfg, mask, j_te, wdm=wdm, s0=s_carry)
+    st_tr, s_carry = _gen_states(cfg, mask, j_tr, wdm=wdm, return_final=True,
+                                 dev_params=dev_params)
+    st_te = _gen_states(cfg, mask, j_te, wdm=wdm, s0=s_carry,
+                        dev_params=dev_params)
     st_tr = maybe_shard(st_tr, ("pod", "data"))
     st_te = maybe_shard(st_te, ("pod", "data"))
 
@@ -521,13 +552,20 @@ class Experiment:
             self.mask = make_mask(config.n_nodes, levels=config.mask_levels,
                                   seed=config.mask_seed)
 
-    def run(self, inputs_train, targets_train, inputs_test, targets_test) -> ExperimentResult:
+    def run(self, inputs_train, targets_train, inputs_test, targets_test,
+            *, dev_params=None) -> ExperimentResult:
         """Fit readouts and evaluate, one task instance per batch row.
 
         Inputs are [B, T] (or [T], treated as B = 1); targets may carry a
         trailing channel axis ([B, T, C]) for multi-output readouts.
         Train/test lengths may differ; all instances in a batch share shapes
         (stack equal-length series; pad/trim upstream otherwise).
+
+        ``dev_params`` sweeps the device operating point across the batch
+        lanes (a traced pytree, e.g. ``devices.cmt.CMTSweepParams``; leaves
+        scalar or [B]) — the design-space-exploration hook (DESIGN.md §14):
+        every lane runs the same compiled program at its own device point,
+        and re-running with new parameter values recompiles nothing.
         """
         tr_in = _canon_batch(inputs_train, "inputs_train")
         te_in = _canon_batch(inputs_test, "inputs_test")
@@ -538,8 +576,26 @@ class Experiment:
             raise ValueError(
                 f"inconsistent batch shapes: train {tr_in.shape}/{tr_tg.shape}, "
                 f"test {te_in.shape}/{te_tg.shape}")
+        if dev_params is not None:
+            if self.config.topology is not None:
+                raise ValueError(
+                    "dev_params with a composed topology is not supported; "
+                    "sweep the single-loop workload")
+            if self.config.state_method == "kernel":
+                raise ValueError(
+                    "dev_params rides the jnp state paths; set "
+                    "state_method='fast' or 'ref' (ROADMAP: swept-params "
+                    "kernel tiles)")
+            b = tr_in.shape[0]
+            for leaf in jax.tree.leaves(dev_params):
+                arr = jnp.asarray(leaf)
+                if arr.ndim > 1 or (arr.ndim == 1 and arr.shape[0] != b):
+                    raise ValueError(
+                        f"dev_params leaves must be scalars or [{b}] "
+                        f"(one value per batch lane), got shape {arr.shape}")
         y, nrmse, ser, lam, w = _run_pipeline(
-            self.config, self.mask, tr_in, tr_tg, te_in, te_tg)
+            self.config, self.mask, tr_in, tr_tg, te_in, te_tg,
+            dev_params=dev_params)
         return _pack_result(y, nrmse, ser, lam, w)
 
     def run_dataset(self, ds) -> ExperimentResult:

@@ -532,6 +532,7 @@ def fit_ridge_streaming(
     state_dtype=None,
     s0: jnp.ndarray | None = None,
     forgetting: float = 1.0,
+    dev_params=None,
 ):
     """Streaming fused reservoir -> readout fit: states never fully resident.
 
@@ -579,13 +580,20 @@ def fit_ridge_streaming(
     is read from the rounded state chunk (the f32 VMEM carry describes the
     chunk *end*, which is past period K - 1); chunk-aligned K keeps it
     f32-exact (DESIGN.md §9).
+
+    ``dev_params`` (a traced device operating-point pytree, e.g.
+    ``devices.cmt.CMTSweepParams`` with [B] leaves) threads per-lane swept
+    device parameters into state generation — an *operand*, so a design-
+    space sweep over it reuses this compiled program (DESIGN.md §14).
+    jnp state methods only (``generate_states`` rejects kernel+params).
     """
     j, y = _canon_stream(j, targets)
 
     def states_fn(j_c, s):
         return generate_states(model, j_c, mask, s0=s, method=state_method,
                                block_s=block_s, return_final=True,
-                               state_dtype=state_dtype)
+                               state_dtype=state_dtype,
+                               dev_params=dev_params)
 
     return _fit_streaming_core(
         states_fn, int(mask.shape[-1]), j, y, washout=washout, chunk_k=chunk_k,

@@ -248,3 +248,55 @@ def test_session_scan_bitwise_matches_streaming_fit(chunk, lam, seed):
     np.testing.assert_array_equal(np.asarray(idx_ref),
                                   np.asarray(state.lam_idx))
     np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(state.s))
+
+# ---------------------------------------------------------------------------
+# CMT device models (DESIGN.md §14), generated splits and grid points
+# ---------------------------------------------------------------------------
+
+from repro.devices import CMTSweepParams, calibrated_twin  # noqa: E402
+
+CMT = calibrated_twin(MODEL, power_mw=1.0)
+
+
+@given(cuts=split_points(), seed=st.integers(0, 20),
+       method=st.sampled_from(["ref", "fast", "kernel"]))
+@settings(max_examples=45, deadline=None)
+def test_cmt_chunked_resume_bit_exact_for_arbitrary_splits(cuts, seed, method):
+    """The CMT carry (intracavity energy; the free-carrier/thermal closure
+    is a function of it alone) resumes bit-exactly at ANY split — fixed-point
+    mirror in tests/test_devices.py."""
+    j = _stream(seed)
+    full, fin_full = generate_states(CMT, j, MASK, method=method,
+                                     return_final=True)
+    bounds = [0] + cuts + [K]
+    s = jnp.zeros((B, N), jnp.float32)
+    parts = []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        states, s = generate_states(CMT, j[:, lo:hi], MASK, s0=s,
+                                    method=method, return_final=True)
+        parts.append(np.asarray(states))
+    np.testing.assert_array_equal(np.concatenate(parts, axis=1),
+                                  np.asarray(full))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(fin_full))
+
+
+@given(seed=st.integers(0, 20),
+       detune=st.floats(-2.0, 2.0), loss=st.floats(1.0, 2.0),
+       power=st.floats(0.0, 2.0))
+@settings(max_examples=40, deadline=None)
+def test_cmt_swept_lane_matches_unswept_point(seed, detune, loss, power):
+    """Any generated grid point evaluated as a dev_params batch lane equals
+    the dedicated model frozen at that point (κ pinned to the base anchor),
+    and stays finite over the loss ≥ 1 box."""
+    import dataclasses
+    j = _stream(seed, b=1)
+    p = CMTSweepParams(detune=jnp.float32(detune), loss_scale=jnp.float32(loss),
+                       power=jnp.float32(power))
+    swept = generate_states(CMT, j, MASK, method="fast", dev_params=p)
+    point = dataclasses.replace(CMT, detune=detune, loss_scale=loss,
+                                power_mw=power, kappa_charge=CMT.kappa_c,
+                                kappa_discharge=CMT.kappa_d)
+    ref = generate_states(point, j, MASK, method="fast")
+    assert np.all(np.isfinite(np.asarray(swept)))
+    np.testing.assert_allclose(np.asarray(swept), np.asarray(ref),
+                               atol=1e-5, rtol=0)
